@@ -1,0 +1,136 @@
+"""Benchmarks for the paper's own performance claims (Secs. 2, 13).
+
+NOTE on this container: nproc == 1, so compute-bound thread parallelism
+cannot exceed 1x; farm/pipeline benchmarks therefore use GIL-releasing
+tasks (timed sleeps = I/O-shaped service times) to measure the *scheduling*
+behaviour the paper describes — speedup ~ nw for farms, service time ~ max
+stage for pipelines.  The device-level equivalents of these claims are
+exercised by the dry-run roofline instead (benchmarks/roofline.py).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import Farm, FFNode, FF_EOS, FnNode, GO_ON, Pipeline
+from repro.core import perf_model as pm
+from repro.core.queues import SPSCQueue
+
+
+def _timeit(fn, repeat=3):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# --- L1: SPSC queue throughput (paper Sec. 2 lock-free claim) -----------------
+def bench_spsc_queue(n=200_000):
+    q = SPSCQueue(1024)
+
+    def run():
+        k = 0
+        for i in range(n):
+            while not q.try_push(i):
+                pass
+            ok, _ = q.try_pop()
+            k += ok
+    dt = _timeit(run)
+    us = dt / n * 1e6
+    return [("spsc_push_pop", us, f"{1/ (dt/n)/1e6:.2f}Mops/s")]
+
+
+# --- Sec. 13: farm speedup ~ T_seq / nw ----------------------------------------
+class _SleepWorker(FFNode):
+    def __init__(self, t):
+        super().__init__()
+        self.t = t
+
+    def svc(self, task):
+        time.sleep(self.t)
+        return task
+
+
+def bench_farm_speedup(m_tasks=32, t_task=0.01):
+    rows = []
+    base = m_tasks * t_task
+    for nw in (1, 2, 4, 8):
+        class Em(FFNode):
+            def __init__(self):
+                super().__init__()
+                self.i = 0
+
+            def svc(self, _):
+                self.i += 1
+                return self.i if self.i <= m_tasks else None
+
+        f = Farm([_SleepWorker(t_task) for _ in range(nw)])
+        f.add_emitter(Em()).add_collector(FnNode(lambda t: GO_ON))
+        t0 = time.perf_counter()
+        assert f.run_and_wait_end() == 0
+        dt = time.perf_counter() - t0
+        measured = base / dt
+        predicted = pm.farm_speedup(m_tasks, t_task, nw)
+        rows.append((f"farm_speedup_nw{nw}", dt / m_tasks * 1e6,
+                     f"speedup={measured:.2f} predicted={predicted:.2f}"))
+    return rows
+
+
+# --- Sec. 13: pipeline service time = max stage time ----------------------------
+def bench_pipeline_service_time(m_tasks=30):
+    stage_times = [0.002, 0.008, 0.004]      # bottleneck = 8 ms
+
+    class Gen(FFNode):
+        def __init__(self):
+            super().__init__()
+            self.i = 0
+
+        def svc(self, _):
+            self.i += 1
+            return self.i if self.i <= m_tasks else None
+
+    stages = [Gen()] + [_SleepWorker(t) for t in stage_times]
+    p = Pipeline(*stages)
+    t0 = time.perf_counter()
+    assert p.run_and_wait_end() == 0
+    dt = time.perf_counter() - t0
+    measured_service = dt / m_tasks
+    predicted = pm.pipeline_service_time(stage_times)
+    return [("pipeline_service_time", measured_service * 1e6,
+             f"predicted={predicted*1e6:.0f}us ratio="
+             f"{measured_service/predicted:.2f}")]
+
+
+# --- Sec. 9: accelerator offload hides latency ----------------------------------
+def bench_accelerator_offload(n=16, t_task=0.01):
+    import jax
+    from repro.core import JaxAccelerator
+
+    def f(x):
+        time.sleep(t_task)       # stand-in for device compute (GIL released)
+        return x
+
+    # inline baseline
+    t0 = time.perf_counter()
+    for i in range(n):
+        f(i)
+        time.sleep(t_task)       # interleaved host work
+    inline = time.perf_counter() - t0
+
+    acc = JaxAccelerator(f, max_inflight=n)
+    acc.run_then_freeze()
+    t0 = time.perf_counter()
+    for i in range(n):
+        acc.offload(i)
+        time.sleep(t_task)       # host work overlaps accelerator work
+    acc.offload(FF_EOS)
+    while acc.load_result()[0]:
+        pass
+    acc.wait()
+    overlapped = time.perf_counter() - t0
+    return [("accelerator_offload", overlapped / n * 1e6,
+             f"inline={inline:.3f}s overlapped={overlapped:.3f}s "
+             f"hide={inline/overlapped:.2f}x")]

@@ -1,0 +1,59 @@
+"""Kernel-layer benchmarks: us_per_call of the jit'd XLA paths at model
+shapes (the executable proxy on CPU), with the Pallas kernels validated
+separately in interpret mode (tests/test_kernels.py).  On TPU the same
+entry points dispatch to the Mosaic kernels."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models.ssm import chunked_gla
+
+
+def _bench(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_attention():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for (name, B, H, S, D) in [("attn_1k", 1, 8, 1024, 64),
+                               ("attn_4k_swa", 1, 4, 4096, 64)]:
+        window = 512 if "swa" in name else 0
+        q = jax.random.normal(key, (B, H, S, D), jnp.bfloat16)
+        f = jax.jit(lambda q: ref.attention_ref(q, q, q, causal=True,
+                                                window=window))
+        us = _bench(f, q)
+        flops = 4 * B * H * S * S * D / 2   # causal
+        rows.append((name, us, f"{flops/us/1e3:.1f}GFLOP/s_cpu"))
+    return rows
+
+
+def bench_gla():
+    key = jax.random.PRNGKey(1)
+    B, H, S, N, P = 2, 8, 2048, 64, 64
+    q = jax.random.normal(key, (B, S, H, N), jnp.float32) * 0.3
+    v = jax.random.normal(key, (B, S, H, P), jnp.float32)
+    la = -jnp.abs(jax.random.normal(key, (B, S, H))) * 0.1
+    f = jax.jit(lambda q, v, la: chunked_gla(q, q, v, la, chunk=256)[0])
+    us = _bench(f, q, v, la)
+    return [("ssd_chunked_2k", us, f"chunk=256")]
+
+
+def bench_router():
+    key = jax.random.PRNGKey(2)
+    T, E, K = 8192, 64, 8
+    logits = jax.random.normal(key, (T, E))
+    f = jax.jit(lambda l: ref.router_topk_ref(l, K, 256))
+    us = _bench(f, logits)
+    return [("router_topk_8k_64e", us, f"{T/us:.1f}tok/us")]

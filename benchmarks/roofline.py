@@ -1,0 +1,97 @@
+"""Roofline report (deliverable g): read results/dryrun/*.json -> the
+per-(arch x shape) table of compute/memory/collective terms, dominant
+bottleneck, MODEL_FLOPS ratio, and one-line recommendations.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh sp|mp] [--tag t]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _advice(rec):
+    r = rec.get("roofline", {})
+    dom = r.get("dominant", "?")
+    mode = rec.get("mode")
+    if dom == "compute":
+        ratio = r.get("useful_flops_ratio", 0)
+        if ratio < 0.5:
+            return "cut non-model FLOPs (remat recompute / masked attn work)"
+        return "near compute roof: fuse + MXU-align remaining ops"
+    if dom == "memory":
+        if mode == "decode":
+            return "KV/state reads dominate: quantize cache or widen batch"
+        return "fuse elementwise chains; raise arithmetic intensity per pass"
+    if dom == "collective":
+        return "reshard: cut all-gathers (FSDP prefetch overlap, SP), " \
+               "compress pod traffic"
+    return ""
+
+
+def load(mesh="sp", tag=""):
+    rows = []
+    suffix = f"__{mesh}{('__' + tag) if tag else ''}.json"
+    for p in sorted(RESULTS.glob(f"*{suffix}")):
+        rec = json.loads(p.read_text())
+        rows.append(rec)
+    return rows
+
+
+def table(rows, fmt="md"):
+    out = []
+    hdr = ["arch", "shape", "ok", "peak GiB", "compute s", "memory s",
+           "collective s", "dominant", "MODEL/HLO flops", "roofline frac",
+           "next lever"]
+    if fmt == "md":
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+    rows = sorted(rows, key=lambda r: (r.get("arch", ""),
+                                       SHAPE_ORDER.index(r["shape"])
+                                       if r.get("shape") in SHAPE_ORDER else 9))
+    for rec in rows:
+        if rec.get("skipped"):
+            line = [rec["arch"], rec["shape"], "SKIP", "-", "-", "-", "-",
+                    "-", "-", "-", rec.get("reason", "")[:48]]
+        elif not rec.get("ok", False) and "roofline" not in rec:
+            line = [rec["arch"], rec["shape"], "FAIL", "-", "-", "-", "-",
+                    "-", "-", "-", rec.get("error", "")[:48]]
+        else:
+            r = rec["roofline"]
+            line = [rec["arch"], rec["shape"],
+                    "ok" if rec.get("fits_hbm", True) else "ok(>16GiB!)",
+                    f"{rec['mem']['peak_gib']:.2f}",
+                    f"{r['compute_s']:.4f}", f"{r['memory_s']:.4f}",
+                    f"{r['collective_s']:.4f}", r["dominant"],
+                    f"{r['useful_flops_ratio']:.3f}",
+                    f"{r['roofline_fraction']:.3f}", _advice(rec)]
+        if fmt == "md":
+            out.append("| " + " | ".join(str(x) for x in line) + " |")
+        else:
+            out.append(",".join(str(x) for x in line))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="sp", choices=["sp", "mp"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mesh, args.tag)
+    if not rows:
+        print("no dry-run results found; run: python -m repro.launch.dryrun --all",
+              file=sys.stderr)
+        return
+    print(table(rows, "csv" if args.csv else "md"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+# One function per paper table/claim. Prints ``name,us_per_call,derived`` CSV.
+#
+#   Sec. 2  (L1 lock-free channels)   -> bench_spsc_queue
+#   Sec. 13 (farm speedup ~ T_seq/nw) -> bench_farm_speedup
+#   Sec. 13 (pipeline T_S = max T_Si) -> bench_pipeline_service_time
+#   Sec. 9  (accelerator offload)     -> bench_accelerator_offload
+#   kernels / end-to-end steps        -> bench_kernels, bench_train
+#   (device-level rooflines live in benchmarks/roofline.py, fed by the
+#    dry-run — this container has no TPU to time.)
+
+import pathlib
+import sys
+import warnings
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))
+
+warnings.filterwarnings("ignore")
+
+
+def main() -> None:
+    from benchmarks.bench_core import (bench_accelerator_offload,
+                                       bench_farm_speedup,
+                                       bench_pipeline_service_time,
+                                       bench_spsc_queue)
+    from benchmarks.bench_kernels import (bench_attention, bench_gla,
+                                          bench_router)
+    from benchmarks.bench_train import bench_decode_step, bench_train_step
+
+    benches = [bench_spsc_queue, bench_farm_speedup,
+               bench_pipeline_service_time, bench_accelerator_offload,
+               bench_attention, bench_gla, bench_router,
+               bench_train_step, bench_decode_step]
+    print("name,us_per_call,derived")
+    for b in benches:
+        try:
+            for name, us, derived in b():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{b.__name__},ERROR,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

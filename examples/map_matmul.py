@@ -1,0 +1,90 @@
+"""The paper's map-on-a-farm-template (FastFlow tutorial Sec. 12.1):
+matrix multiply as Split -> workers -> Compose, at BOTH levels this
+framework provides:
+
+1. host level: the literal ff_map structure (Split emitter partitions
+   C = A x B into row tasks, workers compute rows, Compose rebuilds C);
+2. device level: the same skeleton lowered to shard_map over the mesh
+   (core.device.tensor_map) — Split = PartitionSpec, Compose = psum.
+
+    PYTHONPATH=src python examples/map_matmul.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FFMap, FFNode, GO_ON
+from repro.core.device import tensor_map
+from repro.core.plan import single_device_plan
+from jax.sharding import PartitionSpec as P
+
+
+# --- host-level ff_map (paper code structure) ---------------------------------
+class Split(FFNode):
+    """Emitter: one task per output row (the paper's finer-grain c_ij
+    variant works too; rows keep the demo fast)."""
+    def svc(self, task):
+        A, B, C = task
+        for i in range(A.shape[0]):
+            self.ff_send_out(("row", i, A[i], B, C))
+        return None
+
+
+class Worker(FFNode):
+    def svc(self, t):
+        _, i, a_row, B, C = t
+        return ("res", i, a_row @ B, C)
+
+
+class Compose(FFNode):
+    def __init__(self, n_rows):
+        super().__init__()
+        self.remaining = n_rows
+
+    def svc(self, t):
+        _, i, row, C = t
+        C[i] = row
+        self.remaining -= 1
+        return GO_ON
+
+
+def host_map_matmul(A, B, nworkers=4):
+    C = np.zeros((A.shape[0], B.shape[1]), A.dtype)
+    m = FFMap(Split(), [Worker() for _ in range(nworkers)],
+              Compose(A.shape[0]))
+    m.run_then_freeze()
+    m.offload((A, B, C))
+    from repro.core import FF_EOS
+    m.offload(FF_EOS)
+    m.wait()
+    return C
+
+
+def main():
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(64, 32)).astype(np.float32)
+    B = rng.normal(size=(32, 48)).astype(np.float32)
+
+    C_host = host_map_matmul(A, B)
+    np.testing.assert_allclose(C_host, A @ B, rtol=1e-5)
+    print("host-level ff_map matmul: OK")
+
+    # --- device-level map skeleton ------------------------------------------
+    plan = single_device_plan()
+    f = tensor_map(lambda a, b: a @ b, plan.mesh, axis="model",
+                   split_spec=(P(None, "model"), P("model", None)),
+                   compose="reduce")
+    C_dev = f(jnp.asarray(A), jnp.asarray(B))
+    np.testing.assert_allclose(np.asarray(C_dev), A @ B, rtol=1e-4,
+                               atol=1e-5)
+    print("device-level tensor_map matmul: OK (Split=PartitionSpec, "
+          "Compose=psum)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""The paper's Sieve of Eratosthenes (FastFlow tutorial Secs. 6-7),
+running on this framework's host skeleton runtime — same structure, same
+semantics: a Generate source, N Sieve stages, a Printer sink, composed in a
+pipeline; svc_init/svc_end lifecycle hooks included.
+
+    PYTHONPATH=src python examples/sieve_pipeline.py 7 50
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import FFNode, GO_ON, Pipeline
+
+
+class Generate(FFNode):
+    def __init__(self, n):
+        super().__init__()
+        self.task, self.streamlen = 1, n
+
+    def svc_init(self):
+        print(f"Sieve started. Generating a stream of {self.streamlen} "
+              f"elements, starting with 2")
+        return 0
+
+    def svc(self, _):
+        self.task += 1
+        return self.task if self.task <= self.streamlen else None
+
+
+class Sieve(FFNode):
+    def __init__(self):
+        super().__init__()
+        self.filter = 0
+
+    def svc(self, t):
+        if self.filter == 0:
+            self.filter = t
+            return GO_ON
+        return GO_ON if t % self.filter == 0 else t
+
+    def svc_end(self):
+        print(f"Prime({self.filter})")
+
+
+class Printer(FFNode):
+    def __init__(self):
+        super().__init__()
+        self.first = 0
+
+    def svc_init(self):
+        print("Printer started")
+        return 0
+
+    def svc(self, t):
+        if self.first == 0:
+            self.first = t
+        return GO_ON
+
+    def svc_end(self):
+        print(f"Sieve terminating, prime numbers found up to {self.first}")
+
+
+def main():
+    nstages = int(sys.argv[1]) if len(sys.argv) > 1 else 7
+    streamlen = int(sys.argv[2]) if len(sys.argv) > 2 else 50
+    pipe = Pipeline(Generate(streamlen),
+                    *[Sieve() for _ in range(nstages)], Printer())
+    if pipe.run_and_wait_end() < 0:
+        raise SystemExit("running pipeline failed")
+    print(f"DONE, pipe time = {pipe.ffTime():.3f} (ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end training driver (deliverable b): train a ~100M-parameter LM
+for a few hundred steps through the full production stack — data pipeline,
+mixed-precision train step, checkpointing, fault-tolerant driver, straggler
+watchdog — with an injected mid-run failure to demonstrate checkpoint/
+restart recovery.
+
+Default config is CPU-sized so the example finishes in minutes; pass
+--full-100m for the real ~100M model (same code path, longer wall time).
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 200
+"""
+
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import Config, get
+from repro.core.plan import single_device_plan
+from repro.data import SyntheticLMSource, make_pipeline
+from repro.optim.schedules import cosine_warmup
+from repro.runtime.driver import DriverConfig, TrainDriver
+from repro.runtime.steps import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-100m", action="store_true",
+                    help="~100M params (slow on CPU)")
+    ap.add_argument("--inject-failure", type=int, default=None,
+                    help="raise at this step once to demo restart")
+    args = ap.parse_args()
+
+    if args.full_100m:
+        cfg = Config(name="ff-100m", family="dense", n_layers=12,
+                     d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+                     d_ff=3072, vocab=32768, act="gelu",
+                     attn_parallel="heads", n_kv_eff=12,
+                     q_block=128, kv_block=128)
+    else:
+        cfg = Config(name="ff-20m", family="dense", n_layers=4,
+                     d_model=384, n_heads=6, n_kv_heads=6, head_dim=64,
+                     d_ff=1536, vocab=8192, act="gelu",
+                     attn_parallel="heads", n_kv_eff=6,
+                     q_block=128, kv_block=128)
+
+    plan = single_device_plan()
+    state = init_state(cfg, plan, jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    src = SyntheticLMSource(cfg.vocab, args.seq, args.batch, seed=0)
+    pipe = make_pipeline(src, plan, n_batches=args.steps + 16)
+    step = jax.jit(make_train_step(cfg, plan,
+                                   cosine_warmup(3e-3, 20, args.steps)),
+                   donate_argnums=0)
+
+    fail_at = args.inject_failure
+    fired = [False]
+
+    def fault_hook(s):
+        if fail_at is not None and s == fail_at and not fired[0]:
+            fired[0] = True
+            raise RuntimeError("injected node failure (preemption)")
+
+    driver = TrainDriver(
+        step, state, pipe,
+        DriverConfig(total_steps=args.steps, ckpt_every=25,
+                     ckpt_dir="/tmp/repro_e2e_ckpt", log_every=20),
+        fault_hook=fault_hook)
+    t0 = time.time()
+    out = driver.run()
+    wall = time.time() - t0
+    losses = [h["loss"] for h in out["history"]]
+    toks = args.batch * args.seq * out["final_step"]
+    print(f"done in {wall:.1f}s: loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"{toks/wall/1e3:.1f}k tok/s, restarts={out['restarts']}, "
+          f"stragglers={out['stragglers']}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .ckpt import (CheckpointManager, load_checkpoint, save_checkpoint,
+                   latest_step)
+from .reshard import reshard_state
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "latest_step", "reshard_state"]

@@ -1,0 +1,160 @@
+"""Sharded, atomic, async checkpointing.
+
+Layout:  <dir>/step_<N>/
+            manifest.json          tree structure + dtypes + shapes + extras
+            arr_<i>.npy            one file per leaf (host-gathered)
+         <dir>/step_<N>.tmp...     staged then os.replace()'d — a crash mid-
+                                   save never corrupts the latest checkpoint.
+
+Async: ``save_async`` snapshots leaves to host memory synchronously (cheap,
+device->host copy) and writes files on a background thread — the SPSC
+double-buffer idea again: the training loop never blocks on the filesystem.
+
+On restore, arrays are ``jax.device_put`` against the *current* mesh's
+shardings — combined with checkpoint/reshard.py this gives elastic restart
+on a different mesh shape (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory, step: int, state, extras: Optional[dict] = None,
+                    keep: int = 3) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten(state)
+    def to_host(l):
+        a = np.asarray(jax.device_get(l))
+        # non-native dtypes (bfloat16, fp8) -> widen losslessly for .npy
+        if a.dtype.kind == "V" or str(a.dtype) in ("bfloat16",):
+            a = a.astype(np.float32)
+        return a
+    host = [to_host(l) for l in leaves]
+    manifest = {
+        "step": step,
+        "treedef": jax.tree_util.tree_structure(state).serialize_using_proto().hex()
+        if hasattr(treedef, "serialize_using_proto") else None,
+        "tree_repr": str(treedef),
+        "n_leaves": len(host),
+        "dtypes": [str(a.dtype) for a in host],
+        "shapes": [list(a.shape) for a in host],
+        "extras": extras or {},
+        "time": time.time(),
+    }
+    for i, a in enumerate(host):
+        np.save(tmp / f"arr_{i}.npy", a)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)                       # atomic publish
+    _gc_old(directory, keep)
+    return final
+
+
+def _gc_old(directory: pathlib.Path, keep: int) -> None:
+    steps = sorted(p for p in directory.glob("step_????????")
+                   if p.is_dir() and not p.name.endswith(".tmp"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = pathlib.Path(directory)
+    steps = sorted(p.name for p in directory.glob("step_????????"))
+    if not steps:
+        return None
+    return int(steps[-1].split("_")[1])
+
+
+def load_checkpoint(directory, state_like, step: Optional[int] = None,
+                    shardings=None):
+    """Restore into the structure of ``state_like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching tree of
+    NamedShardings for the *current* mesh (elastic restart)."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves, treedef = _flatten(state_like)
+    assert manifest["n_leaves"] == len(leaves), \
+        (manifest["n_leaves"], len(leaves))
+    arrays = [np.load(d / f"arr_{i}.npy") for i in range(len(leaves))]
+    # cast through jnp (handles bfloat16 and other ml_dtypes)
+    arrays = [jax.numpy.asarray(a, dtype=l.dtype)
+              for a, l in zip(arrays, leaves)]
+    if shardings is not None:
+        sh_leaves = treedef.flatten_up_to(shardings)
+        arrays = [jax.device_put(a, s) for a, s in zip(arrays, sh_leaves)]
+    return treedef.unflatten(arrays), manifest.get("extras", {})
+
+
+class CheckpointManager:
+    """Background (async) saver with double buffering + restore helper."""
+
+    def __init__(self, directory, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+        self.error: Optional[BaseException] = None
+
+    def save_async(self, step: int, state, extras: Optional[dict] = None):
+        self.wait()                          # one in flight at a time
+        # snapshot to host NOW (state may be donated/mutated next step)
+        host_state = jax.tree.map(lambda l: np.asarray(jax.device_get(l)),
+                                  state)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_state, extras,
+                                self.keep)
+                self.last_saved = step
+            except BaseException as e:       # noqa: BLE001
+                self.error = e
+
+        self._thread = threading.Thread(target=work, daemon=True,
+                                        name="ckpt-saver")
+        self._thread.start()
+
+    def save(self, step: int, state, extras: Optional[dict] = None):
+        save_checkpoint(self.directory, step, state, extras, self.keep)
+        self.last_saved = step
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.error is not None:
+            e, self.error = self.error, None
+            raise e
+
+    def restore(self, state_like, step: Optional[int] = None, shardings=None):
+        return load_checkpoint(self.directory, state_like, step, shardings)
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.directory)

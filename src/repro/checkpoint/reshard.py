@@ -1,0 +1,30 @@
+"""Elastic resharding: restore any checkpoint onto any mesh.
+
+Checkpoints store full (host-gathered) arrays, so resharding is just
+``device_put`` with the new plan's shardings — shrink 512 -> 256 chips or
+grow 256 -> 512 without conversion tools.  For states whose *structure*
+depends on the mesh (none of ours do — factored Adafactor stats are
+mesh-independent) a transform hook is provided.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from ..core.plan import ShardingPlan
+from ..runtime.steps import state_shardings, state_structs
+
+
+def reshard_state(cfg, old_state_host, new_plan: ShardingPlan,
+                  transform: Optional[Callable] = None):
+    """old_state_host: pytree of host numpy arrays (from load_checkpoint
+    without shardings).  Returns the state placed on new_plan's mesh."""
+    if transform is not None:
+        old_state_host = transform(old_state_host)
+    sh = state_shardings(cfg, new_plan)
+    leaves, treedef = jax.tree.flatten(old_state_host)
+    sh_leaves = treedef.flatten_up_to(sh)
+    placed = [jax.device_put(a, s) for a, s in zip(leaves, sh_leaves)]
+    return treedef.unflatten(placed)

@@ -1,0 +1,39 @@
+"""--arch <id> registry: the 10 assigned architectures (+ tiny demo config).
+
+Sources ([tier]) are recorded on each Config; exact numbers follow the
+assignment table.
+"""
+
+from __future__ import annotations
+
+from .base import Config
+
+_REGISTRY = {}
+
+
+def register(cfg: Config) -> Config:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> Config:
+    import copy
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return copy.deepcopy(_REGISTRY[name])
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+
+def _load_all():
+    # one module per assigned architecture (deliverable f)
+    from . import (gemma_7b, yi_34b, mistral_large_123b, llama3_2_3b,
+                   kimi_k2_1t_a32b, mixtral_8x7b, xlstm_125m, zamba2_1_2b,
+                   whisper_medium, qwen2_vl_2b, ff_tiny)  # noqa: F401
+
+
+_load_all()
+ASSIGNED = [n for n in names() if n != "ff-tiny"]

@@ -1,0 +1,25 @@
+# The paper's primary contribution — the FastFlow structured-parallel
+# skeleton framework, adapted from shared-memory multicores to TPU pods.
+#
+# Host layer (paper-faithful API): queues, ff_node, Pipeline/Farm/FFMap,
+# load balancers, feedback, accelerator mode.
+# Device layer: skeleton lowering onto a JAX mesh (core.device), the
+# logical-axis sharding plan (core.plan), and the Sec. 13 performance
+# model extended with a TPU roofline (core.perf_model).
+
+from .node import EOS, GO_ON, FFNode, FnNode
+from .queues import MPMCQueue, MPSCQueue, QueueClosed, SPMCQueue, SPSCQueue
+from .skeletons import (BroadcastLB, Farm, FF_EOS, FFMap, LoadBalancer,
+                        OnDemandLB, Pipeline, RoundRobinLB, Skeleton)
+from .accelerator import JaxAccelerator
+from .plan import DEFAULT_RULES, ShardingPlan, single_device_plan
+from . import device, perf_model
+
+__all__ = [
+    "EOS", "GO_ON", "FF_EOS", "FFNode", "FnNode",
+    "SPSCQueue", "SPMCQueue", "MPSCQueue", "MPMCQueue", "QueueClosed",
+    "Pipeline", "Farm", "FFMap", "Skeleton",
+    "LoadBalancer", "RoundRobinLB", "OnDemandLB", "BroadcastLB",
+    "JaxAccelerator", "ShardingPlan", "single_device_plan", "DEFAULT_RULES",
+    "device", "perf_model",
+]

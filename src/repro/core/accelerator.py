@@ -1,0 +1,100 @@
+"""FastFlow *software accelerator* mode (paper Sec. 9), with the TPU mesh as
+the accelerator device.
+
+The paper's accelerator replaces ``y = f(x)`` with::
+
+    acc.run_then_freeze(); acc.offload(x); ...; ok, y = acc.load_result()
+
+Here ``f`` is a compiled SPMD step function.  JAX's asynchronous dispatch is
+the offload queue (the call returns immediately with futures); a bounded host
+SPSC queue provides back-pressure so the host cannot run unboundedly ahead of
+the device — exactly the role of the bounded lock-free queue in FastFlow.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from .node import EOS
+from .queues import SPSCQueue
+
+
+class JaxAccelerator:
+    """Offload ``fn(*task)`` calls onto the device mesh asynchronously.
+
+    - ``run_then_freeze()``  start the dispatcher thread (compiles on first task)
+    - ``offload(task)``      enqueue a task (a tuple of args for ``fn``)
+    - ``offload(FF_EOS)``    signal end-of-stream
+    - ``load_result()``      blocking: (ok, result); ok=False after EOS
+    - ``load_result_nb()``   non-blocking variant
+    - ``wait()``             join; returns 0/-1 like run_and_wait_end
+    """
+
+    def __init__(self, fn: Callable, max_inflight: int = 8,
+                 donate: bool = False):
+        self._fn = fn
+        self._in: SPSCQueue = SPSCQueue(max(2, max_inflight))
+        self._out: SPSCQueue = SPSCQueue(4096)
+        self._thread: Optional[threading.Thread] = None
+        self.error: Optional[BaseException] = None
+        self._t0 = self._t1 = 0.0
+        self.offloaded = 0
+
+    # -- paper API -------------------------------------------------------------
+    def run_then_freeze(self) -> int:
+        self._t0 = time.perf_counter()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="jax-accelerator")
+        self._thread.start()
+        return 0
+
+    def offload(self, task: Any) -> None:
+        self._in.push(task)
+        if task is not EOS:
+            self.offloaded += 1
+
+    def load_result(self, timeout: Optional[float] = None) -> tuple[bool, Any]:
+        item = self._out.pop(timeout)
+        if item is EOS:
+            return False, None
+        # a result may be a pytree of DeviceArrays: block for data readiness
+        jax.block_until_ready(item)
+        return True, item
+
+    def load_result_nb(self) -> tuple[bool, Any]:
+        ok, item = self._out.try_pop()
+        if not ok or item is EOS:
+            return False, None
+        jax.block_until_ready(item)
+        return True, item
+
+    def wait(self, timeout: Optional[float] = None) -> int:
+        if self._thread is not None:
+            self._thread.join(timeout)
+        self._t1 = time.perf_counter()
+        return -1 if self.error is not None else 0
+
+    def ffTime(self) -> float:
+        return (self._t1 - self._t0) * 1e3
+
+    # -- dispatcher --------------------------------------------------------------
+    def _loop(self) -> None:
+        try:
+            while True:
+                task = self._in.pop()
+                if task is EOS:
+                    break
+                args = task if isinstance(task, tuple) else (task,)
+                # async dispatch: returns immediately, device queues the work
+                result = self._fn(*args)
+                self._out.push(result)
+        except BaseException as e:  # noqa: BLE001
+            self.error = e
+            import traceback
+            traceback.print_exc()
+        finally:
+            self._out.push(EOS)

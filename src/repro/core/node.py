@@ -1,0 +1,131 @@
+"""L3 building block — the ``ff_node`` sequential-concurrent-activity
+abstraction (FastFlow Secs. 4-6).
+
+A node wraps business-logic into ``svc`` (called once per input stream item),
+with ``svc_init``/``svc_end`` lifecycle hooks.  Returning:
+
+- an object  -> delivered onto the node's output stream;
+- ``GO_ON``  -> no output, keep the node alive;
+- ``EOS``    -> terminate this node; end-of-stream propagates downstream
+                (FastFlow returns NULL; we use an explicit sentinel).
+
+``ff_send_out`` delivers extra items mid-``svc`` (Sec. 5).  Each node runs on
+its own thread; streams are the SPSC queues of core/queues.py.
+"""
+
+from __future__ import annotations
+
+import threading
+import traceback
+from typing import Any, Callable, Optional
+
+from .queues import SPSCQueue
+
+
+class _Sentinel:
+    def __init__(self, name: str):
+        self._name = name
+
+    def __repr__(self):
+        return self._name
+
+
+GO_ON = _Sentinel("GO_ON")
+EOS = _Sentinel("EOS")            # FastFlow: returning NULL / FF_EOS mark
+_NO_INPUT = _Sentinel("NO_INPUT")  # activation token for source nodes
+
+
+class FFNode:
+    """Subclass and override ``svc`` (mandatory), ``svc_init``/``svc_end``
+    (optional), exactly as in the paper."""
+
+    def __init__(self):
+        self._out: Optional[Callable[[Any], None]] = None
+        self._id: int = -1
+        self.thread: Optional[threading.Thread] = None
+        self.error: Optional[BaseException] = None
+        self.svc_calls: int = 0   # for stats (ffStats analogue)
+        # When this node has an input stream but must generate initial tasks
+        # itself (divide&conquer emitters on a feedback loop), set
+        # ``prime = True``: svc(None) is called once before consuming input.
+        self.prime: bool = False
+
+    # -- user API ------------------------------------------------------------
+    def svc(self, task: Any) -> Any:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def svc_init(self) -> int:
+        return 0
+
+    def svc_end(self) -> None:
+        pass
+
+    def get_my_id(self) -> int:
+        """Paper Sec. 14 run-time routine."""
+        return self._id
+
+    def ff_send_out(self, task: Any) -> None:
+        if self._out is None:
+            raise RuntimeError("ff_send_out outside a running streaming network")
+        self._out(task)
+
+    # -- runtime -------------------------------------------------------------
+    def _bind(self, out_fn: Callable[[Any], None], node_id: int) -> None:
+        self._out = out_fn
+        self._id = node_id
+
+    def _run_loop(self, in_q: Optional[SPSCQueue]) -> None:
+        """Thread body: pull from input stream (if any), call svc, route
+        output.  End-of-stream handling follows the paper: EOS on the input
+        stream terminates the node (svc not called) and propagates."""
+        try:
+            if self.svc_init() < 0:
+                raise RuntimeError(f"svc_init failed in {type(self).__name__}")
+            primed = (in_q is None) or not self.prime
+            while True:
+                if in_q is None:
+                    task = _NO_INPUT
+                elif not primed:
+                    task, primed = _NO_INPUT, True
+                else:
+                    task = in_q.pop()
+                    if task is EOS:
+                        break
+                self.svc_calls += 1
+                result = self.svc(None if task is _NO_INPUT else task)
+                if result is None:   # paper: returning NULL terminates the node
+                    result = EOS
+                if result is EOS:
+                    break
+                if result is not GO_ON:
+                    self._out(result)
+        except BaseException as e:  # noqa: BLE001 - surfaced to the runner
+            self.error = e
+            traceback.print_exc()
+        finally:
+            try:
+                self.svc_end()
+            finally:
+                if self._out is not None:
+                    self._out(EOS)
+
+    def _start(self, in_q: Optional[SPSCQueue]) -> None:
+        self.thread = threading.Thread(
+            target=self._run_loop, args=(in_q,), daemon=True,
+            name=f"ffnode-{type(self).__name__}-{self._id}")
+        self.thread.start()
+
+    def _join(self, timeout: Optional[float] = None) -> None:
+        if self.thread is not None:
+            self.thread.join(timeout)
+
+
+class FnNode(FFNode):
+    """Convenience: lift a plain callable into an ff_node."""
+
+    def __init__(self, fn: Callable[[Any], Any]):
+        super().__init__()
+        self._fn = fn
+
+    def svc(self, task: Any) -> Any:
+        return self._fn(task)

@@ -1,0 +1,166 @@
+"""Performance model — paper Sec. 13, extended with the TPU roofline.
+
+The paper's algebra:
+  * farm:     T(m tasks, nw workers) ~= T_seq / nw, bounded by emitter /
+              collector service times and Amdahl's law;
+  * pipeline: service time T_S = max_i T_Si; speedup = sum T_Si / max T_Si.
+
+We reuse exactly that algebra to pick pipeline microbatch counts and farm
+widths, and extend it with a three-term roofline (compute / HBM / ICI) used by
+benchmarks/roofline.py and the §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence
+
+
+# --------------------------------------------------------------------------
+# Paper Sec. 13 algebra
+# --------------------------------------------------------------------------
+def farm_time(m_tasks: int, t_task: float, nw: int,
+              t_emit: float = 0.0, t_collect: float = 0.0) -> float:
+    """Completion time of m tasks on an nw-worker farm: workers process in
+    parallel, but the emitter/collector are serial stages — the farm's
+    service time is max(t_emit, t_task/nw, t_collect)."""
+    service = max(t_emit, t_task / nw, t_collect)
+    return m_tasks * service + t_task  # + one task latency (paper: latency
+    # of a single task does not decrease)
+
+
+def farm_speedup(m_tasks: int, t_task: float, nw: int,
+                 t_emit: float = 0.0, t_collect: float = 0.0) -> float:
+    return (m_tasks * t_task) / farm_time(m_tasks, t_task, nw, t_emit, t_collect)
+
+
+def pipeline_service_time(stage_times: Sequence[float]) -> float:
+    return max(stage_times)
+
+
+def pipeline_time(m_tasks: int, stage_times: Sequence[float]) -> float:
+    """m x T_S plus the fill latency sum(T_Si)."""
+    return m_tasks * pipeline_service_time(stage_times) + sum(stage_times)
+
+
+def pipeline_speedup(stage_times: Sequence[float], m_tasks: int = 10**9) -> float:
+    """-> sum T_Si / max T_Si for long streams (paper's formula)."""
+    seq = sum(stage_times)
+    return (m_tasks * seq) / pipeline_time(m_tasks, stage_times) * (1.0)
+
+
+def amdahl(serial_fraction: float, n: int) -> float:
+    return 1.0 / (serial_fraction + (1.0 - serial_fraction) / n)
+
+
+def pipeline_bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble: (S-1)/(M+S-1) — the fill/drain idle fraction of the
+    device pipeline skeleton."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def choose_microbatches(n_stages: int, max_bubble: float = 0.1,
+                        max_micro: int = 256) -> int:
+    """Smallest M with bubble fraction <= max_bubble."""
+    m = math.ceil((n_stages - 1) * (1.0 - max_bubble) / max_bubble)
+    return max(1, min(m, max_micro))
+
+
+# --------------------------------------------------------------------------
+# TPU v5e roofline (target hardware; this container only dry-runs)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float   # per chip, FLOP/s
+    hbm_bw: float            # per chip, B/s
+    ici_bw: float            # per link, B/s
+    dci_bw: float            # per pod-to-pod link share, B/s
+    hbm_bytes: float
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    dci_bw=6.25e9,   # conservative DCI share per chip
+    hbm_bytes=16 * 2**30,
+)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """The three terms, in seconds, per step, per chip (the prompt's
+    definitions: totals divided by (chips x peak))."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # breakdown
+    flops_total: float = 0.0
+    bytes_total: float = 0.0
+    coll_bytes_ici: float = 0.0
+    coll_bytes_dci: float = 0.0
+    model_flops: float = 0.0
+    model_flops_s: float = 0.0   # time to run MODEL_FLOPS at peak
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (perfect-overlap) step time = max of terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute fraction: MODEL_FLOPS-at-peak time / step-time."""
+        if self.step_time_s == 0 or not self.model_flops:
+            return 0.0
+        return self.model_flops_s / self.step_time_s
+
+
+def roofline(flops_total: float, bytes_total: float,
+             coll_bytes_ici_per_chip: float, n_chips: int,
+             hw: HardwareSpec = TPU_V5E,
+             coll_bytes_dci_per_chip: float = 0.0,
+             model_flops: float = 0.0) -> RooflineTerms:
+    """flops_total/bytes_total are fleet totals (sum over chips); collective
+    bytes are per-chip link traffic (ring-model)."""
+    compute_s = flops_total / (n_chips * hw.peak_flops_bf16)
+    memory_s = bytes_total / (n_chips * hw.hbm_bw)
+    collective_s = (coll_bytes_ici_per_chip / hw.ici_bw
+                    + coll_bytes_dci_per_chip / hw.dci_bw)
+    return RooflineTerms(
+        compute_s, memory_s, collective_s,
+        flops_total=flops_total, bytes_total=bytes_total,
+        coll_bytes_ici=coll_bytes_ici_per_chip,
+        coll_bytes_dci=coll_bytes_dci_per_chip,
+        model_flops=model_flops,
+        model_flops_s=model_flops / (n_chips * hw.peak_flops_bf16))
+
+
+# ring-model per-chip traffic for each collective kind -----------------------
+def collective_link_bytes(kind: str, operand_bytes: float, group_size: int) -> float:
+    """Per-chip bytes that traverse links for one collective, ring algorithm.
+    ``operand_bytes`` is the per-device operand (post-SPMD HLO shapes are
+    already per-device)."""
+    n = max(group_size, 1)
+    if n == 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * operand_bytes * (n - 1) / n
+    if kind in ("all-gather",):
+        # operand is the local shard; each chip receives (n-1) shards
+        return operand_bytes * (n - 1)
+    if kind in ("reduce-scatter",):
+        return operand_bytes * (n - 1) / n
+    if kind in ("all-to-all",):
+        return operand_bytes * (n - 1) / n
+    if kind in ("collective-permute", "collective-permute-start"):
+        return operand_bytes
+    return operand_bytes

@@ -1,0 +1,168 @@
+"""L2 — the "arbitrary streaming network" layer for the device side.
+
+A :class:`ShardingPlan` is the compiled form of a skeleton composition: it maps
+*logical* tensor axes (batch, embed, heads, ffn, vocab, expert, seq, ...) onto
+*mesh* axes.  The farm skeleton contributes the ``batch``/``fsdp`` mapping
+(emitter = scatter over data axis, collector = gradient reduction), the map
+skeleton contributes ``tp``/``seq`` (Split/Compose over the model axis), and
+the MoE farm contributes ``expert`` (MPMC all-to-all).
+
+Models never mention mesh axes directly; they annotate tensors with logical
+axis names and call :meth:`ShardingPlan.constrain`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis vocabulary ----------------------------------------------------
+#   batch     global batch                     -> (pod, data)
+#   fsdp      parameter shard dim (ZeRO-3)     -> data (optionally +pod)
+#   tp        tensor-parallel dim (heads/ffn/vocab/experts)
+#   sp        sequence dim of activations between blocks (Megatron-SP)
+#   cp        sequence dim inside context-parallel attention
+#   none      replicated
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "sp": ("model",),
+    "cp": ("model",),
+    "expert": ("model",),
+    "layers": (),      # stacked scan dim — never sharded
+    "none": (),
+}
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    """Logical-axis -> mesh-axis mapping plus activation-constraint policy."""
+
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+    # toggles used by the perf hillclimb
+    sequence_parallel: bool = True      # shard residuals over model axis (SP)
+    fsdp_params: bool = True            # ZeRO-3 weight sharding over data
+    constrain_activations: bool = True
+
+    def __post_init__(self):
+        self._axis_names = set(self.mesh.axis_names)
+
+    # -- resolution ----------------------------------------------------------
+    def axes(self, logical: Optional[str]):
+        """Resolve a logical axis to mesh axes present in this mesh."""
+        if logical is None or logical == "none":
+            return None
+        if logical == "sp" and not self.sequence_parallel:
+            return None
+        if logical not in self.rules:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        names = tuple(a for a in self.rules[logical] if a in self._axis_names)
+        if not names:
+            return None
+        return names if len(names) > 1 else names[0]
+
+    def pspec(self, *logicals: Optional[str]) -> P:
+        return P(*[self.axes(l) for l in logicals])
+
+    def sharding(self, *logicals: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(*logicals))
+
+    def _fit_dim(self, dim: int, logical: Optional[str]):
+        """Mesh axes for one dim, dropping axes that don't divide it
+        (partial sharding — e.g. batch=1 decode replicates over data)."""
+        if logical == "fsdp" and not self.fsdp_params:
+            return None
+        ax = self.axes(logical)
+        if ax is None:
+            return None
+        axes_t = ax if isinstance(ax, tuple) else (ax,)
+        keep, prod = [], 1
+        for a in axes_t:
+            n = self.mesh.shape[a]
+            if dim % (prod * n) == 0:
+                keep.append(a)
+                prod *= n
+        if not keep:
+            return None
+        return tuple(keep) if len(keep) > 1 else keep[0]
+
+    def spec_for_shape(self, shape: Sequence[int],
+                       logicals: Sequence[Optional[str]]) -> P:
+        return P(*[self._fit_dim(d, l) for d, l in zip(shape, logicals)])
+
+    def constrain(self, x, *logicals: Optional[str]):
+        if not self.constrain_activations:
+            return x
+        spec = self.spec_for_shape(x.shape, logicals)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def gather_fsdp(self, w, axes: Sequence[Optional[str]]):
+        """ZeRO-3 weight gather at the use site: drop the 'fsdp' dims so
+        GSPMD all-gathers the (small, bf16) weight shards instead of
+        partial-summing (large, f32) activations over the data axis."""
+        if not self.fsdp_params:
+            return w
+        un = tuple(None if a == "fsdp" else a for a in axes)
+        return self.constrain(w, *un)
+
+    # -- parameter specs -------------------------------------------------------
+    def param_spec(self, logical_axes: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None) -> P:
+        """Spec for a parameter given per-dim logical names.  Honors the
+        ``fsdp_params`` toggle; with a shape, drops non-dividing axes."""
+        if shape is not None:
+            return self.spec_for_shape(shape, logical_axes)
+        out = []
+        for l in logical_axes:
+            if l == "fsdp" and not self.fsdp_params:
+                out.append(None)
+            else:
+                out.append(self.axes(l))
+        return P(*out)
+
+    def sharding_for(self, logical_axes: Sequence[Optional[str]],
+                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_spec(logical_axes, shape))
+
+    def tree_shardings(self, logical_tree) -> Any:
+        """Map a pytree of per-dim logical-axis tuples to NamedShardings."""
+        return jax.tree.map(
+            lambda la: NamedSharding(self.mesh, self.param_spec(la)),
+            logical_tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+
+    # -- derived sizes ---------------------------------------------------------
+    def axis_size(self, logical: str) -> int:
+        ax = self.axes(logical)
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[ax]
+
+    @property
+    def dp(self) -> int:
+        return self.axis_size("batch")
+
+    @property
+    def tp(self) -> int:
+        return self.axis_size("tp")
+
+
+def single_device_plan() -> ShardingPlan:
+    """A trivial plan over whatever single-device mesh exists (tests/CPU)."""
+    import numpy as np
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, axis_names=("data", "model"))
+    return ShardingPlan(mesh=mesh)

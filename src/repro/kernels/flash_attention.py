@@ -1,0 +1,117 @@
+"""Blocked (flash) GQA attention — Pallas TPU kernel.
+
+TPU adaptation of the paper's L1 insight: the HBM->VMEM block stream is a
+double-buffered SPSC channel; the grid's sequential minor dimension streams
+KV blocks past resident Q blocks with running-softmax state in VMEM scratch
+(producer = Pallas prefetch pipeline, consumer = MXU matmuls).
+
+Grid: (B, H, n_q_blocks, n_kv_blocks) — the last dimension iterates
+sequentially on TPU, so the fp32 (acc, m, l) scratch carries across KV
+blocks of one Q tile.  Causal/SWA masking is applied per block; fully-masked
+blocks are skipped with pl.when (the FLOP savings the XLA fallback realizes
+by trace-time block skipping).
+
+GQA: the KV head index map is h -> h // group, so KV heads are never
+materialized repeated.  Block shapes are MXU-aligned (multiples of 128 on
+the contracting/lane dims when shapes allow).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, bq, bk, nk, q_offset):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = iq * bq + q_offset          # global position of first query
+    k_lo = jk * bk
+    # block-level reachability (static shapes, dynamic predicate)
+    reachable = jnp.logical_and(
+        jnp.logical_or(not causal, k_lo <= q_lo + bq - 1),
+        jnp.logical_or(window <= 0, k_lo + bk - 1 > q_lo - window))
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, P)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: (B,H,Sq,D); k,v: (B,Hkv,Sk,D), Hkv | H.  Returns (B,H,Sq,D).
+    Queries are aligned to the END of the key sequence (self-attention when
+    Sq == Sk; incremental/chunked prefill when Sq < Sk)."""
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = H // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(D)
+    q_offset = Sk - Sq
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),     # running max
+            pltpu.VMEM((bq,), jnp.float32),     # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,71 @@
+"""jit'd public wrappers for the Pallas kernels, with XLA fallbacks and
+recompute-from-oracle backward passes.
+
+On this CPU container the kernels run under ``interpret=True`` (the kernel
+body executes in Python) — correctness validation only.  On TPU the same
+``pl.pallas_call`` lowers to Mosaic.  ``custom_vjp`` backward recomputes
+through the ref oracle (forward-optimized; dedicated bwd kernels are listed
+as future perf headroom in EXPERIMENTS.md §Perf)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash_fwd
+from .router_topk import router_topk as _router_fwd
+from .ssd_scan import ssd_scan as _ssd_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# -- flash attention -----------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal=True, window=0, block=128):
+    return _flash_fwd(q, k, v, causal=causal, window=window,
+                      block_q=block, block_k=block,
+                      interpret=not _on_tpu())
+
+
+def _fa_fwd(q, k, v, causal, window, block):
+    return flash_attention(q, k, v, causal, window, block), (q, k, v)
+
+
+def _fa_bwd(causal, window, block, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: ref.attention_ref(
+        q, k, v, causal=causal, window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# -- chunked linear recurrence ----------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def ssd_scan(q, k, v, log_a, chunk=128):
+    return _ssd_fwd(q, k, v, log_a, chunk=chunk, interpret=not _on_tpu())
+
+
+def _ssd_fwd_rule(q, k, v, log_a, chunk):
+    return ssd_scan(q, k, v, log_a, chunk), (q, k, v, log_a)
+
+
+def _ssd_bwd_rule(chunk, res, g):
+    q, k, v, log_a = res
+    _, vjp = jax.vjp(ref.ssd_scan_ref, q, k, v, log_a)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_ssd_fwd_rule, _ssd_bwd_rule)
+
+
+# -- router (routing itself carries no gradient; weights do, upstream) ------------
+def router_topk(logits, top_k: int, capacity: int, block_t: int = 256):
+    return _router_fwd(jax.lax.stop_gradient(logits), top_k, capacity,
+                       block_t=block_t, interpret=not _on_tpu())

@@ -1,0 +1,92 @@
+"""MoE top-k router + capacity dispatch — Pallas TPU kernel.
+
+The farm emitter's ``selectworker`` as a kernel: per token block, compute
+softmax + iterative top-k (K is small), then the capacity-bounded position
+of every (token, k) slot in its expert lane.  The running per-expert
+counters live in fp32/int32 VMEM scratch and carry across token blocks (the
+grid's sequential dimension) — first-come-first-served lane occupancy,
+exactly like the bounded SPSC queue it models.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _kernel(logits_ref, w_ref, idx_ref, pos_ref, keep_ref, counts_ref, *,
+            K, E, capacity, bt):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    logits = logits_ref[...].astype(jnp.float32)          # (bt, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # iterative top-k (K small)
+    masked = probs
+    ws, idxs = [], []
+    for _ in range(K):
+        w = jnp.max(masked, axis=-1)
+        i = jnp.argmax(masked, axis=-1)
+        ws.append(w)
+        idxs.append(i)
+        masked = jnp.where(jax.nn.one_hot(i, E, dtype=jnp.bool_),
+                           NEG_INF, masked)
+    w = jnp.stack(ws, axis=-1)                            # (bt, K)
+    idx = jnp.stack(idxs, axis=-1).astype(jnp.int32)      # (bt, K)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+
+    # positions: running expert counters + rank within this block
+    flat = idx.reshape(bt * K)
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)     # (bt*K, E)
+    within = jnp.cumsum(onehot, axis=0) - onehot          # exclusive rank
+    base = counts_ref[...]                                # (E,)
+    pos = (within + base[None, :])                        # (bt*K, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                  # (bt*K,)
+    keep = pos < capacity
+
+    w_ref[...] = w.astype(w_ref.dtype)
+    idx_ref[...] = idx
+    pos_ref[...] = pos.reshape(bt, K).astype(jnp.int32)
+    keep_ref[...] = keep.reshape(bt, K)
+    counts_ref[...] = base + jnp.sum(onehot, axis=0)
+
+
+def router_topk(logits, top_k: int, capacity: int, *, block_t: int = 256,
+                interpret: bool = True):
+    """logits: (T, E) -> (weights (T,K) f32, experts (T,K) i32,
+    positions (T,K) i32, keep (T,K) bool)."""
+    T, E = logits.shape
+    bt = min(block_t, T)
+    assert T % bt == 0, (T, bt)
+    nt = T // bt
+    kernel = functools.partial(_kernel, K=top_k, E=E, capacity=capacity,
+                               bt=bt)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+            pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+            pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+            pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.bool_),
+        ],
+        scratch_shapes=[pltpu.VMEM((E,), jnp.int32)],
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,136 @@
+"""Post-SPMD HLO analysis: collective inventory + ring-model link bytes.
+
+Shapes in post-partitioning HLO are per-device, so each collective op's
+operand size is the per-chip buffer; core.perf_model.collective_link_bytes
+turns (kind, operand_bytes, group_size) into per-chip link traffic.
+
+Loop correction: XLA cost analysis (and a flat text scan) counts a ``while``
+body once.  Step functions keep layer scans as the only loops; the dry-run
+combines the full program's raw counts with per-layer probe programs:
+
+    corrected = full_raw + sum_kind (trips_kind - instances_kind) * probe_kind
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..core.perf_model import collective_link_bytes
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", )
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [num_groups, group_size]<=[N] (iota format)
+        return int(m.group(2))
+    return total_devices
+
+
+def _group_stride(line: str) -> int:
+    """Smallest id distance within the first replica group (explicit format
+    only) — used to classify pod-axis (DCI) collectives."""
+    m = _GROUPS_BRACE_RE.search(line)
+    if not m:
+        return 1
+    ids = [int(x) for x in m.group(1).split(",") if x.strip() != ""]
+    if len(ids) < 2:
+        return 1
+    return min(abs(b - a) for a, b in zip(ids, ids[1:]))
+
+
+def _max_component_bytes(type_str: str) -> int:
+    best = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dt])
+    return best
+
+
+def parse_collectives(hlo_text: str, total_devices: int,
+                      pod_stride: int = 0) -> List[dict]:
+    """One record per collective op occurrence (while bodies counted once —
+    corrected by the caller).  Operand sizes are derived from the *result*
+    type (operand refs in post-opt HLO text carry no types):
+      all-gather: operand = result/gs;  reduce-scatter: operand = result*gs;
+      all-reduce / all-to-all / permute: operand = result.
+    Async (-start) tuples: use the largest array component."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        is_async = m.group(4) is not None
+        rtype = m.group(1) if m.group(1) is not None else m.group(2)
+        # async -start results are (operand, result) pairs -> take the max
+        # component; sync results may be tuples of COMBINED collectives ->
+        # sum the components.
+        rbytes = (_max_component_bytes(rtype) if is_async
+                  else _shape_bytes(rtype))
+        gs = _group_size(line, total_devices)
+        if kind == "all-gather":
+            operand = rbytes / max(gs, 1)
+        elif kind == "reduce-scatter":
+            operand = rbytes * gs
+        else:  # all-reduce, all-to-all, collective-permute
+            operand = rbytes
+        link = collective_link_bytes(kind, operand, gs)
+        stride = _group_stride(line)
+        is_dci = bool(pod_stride) and stride >= pod_stride
+        out.append({"kind": kind, "operand_bytes": operand,
+                    "group_size": gs, "link_bytes": link, "dci": is_dci})
+    return out
+
+
+def total_link_bytes(colls: List[dict]) -> Tuple[float, float]:
+    ici = sum(c["link_bytes"] for c in colls if not c["dci"])
+    dci = sum(c["link_bytes"] for c in colls if c["dci"])
+    return ici, dci
+
+
+def count_kinds(colls: List[dict]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for c in colls:
+        out[c["kind"]] = out.get(c["kind"], 0) + 1
+    return out

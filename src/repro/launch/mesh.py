@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing this module never touches
+jax device initialization.  The dry-run entrypoint (dryrun.py) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) devices exist — used by
+    tests and CPU examples."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,603 @@
+"""Unified language-model backbone covering all assigned architectures.
+
+A model is a sequence of *segments*, each a homogeneous stack of blocks run
+under ``lax.scan`` (stacked params, full remat).  Block kinds:
+
+  dense        GQA attention + GLU MLP           (gemma/yi/mistral/llama/...)
+  moe          GQA attention + MoE farm          (kimi, mixtral)
+  mamba2       SSD state-space block             (zamba2 backbone)
+  mlstm/slstm  xLSTM blocks                      (xlstm-125m)
+  shared_attn  zamba2's shared transformer block (same params every call —
+               the broadcast/MISD farm: one task stream, one worker reused)
+
+Families 'encdec' (whisper) and 'vlm' (qwen2-vl) reuse the same machinery
+with stub frontends (precomputed frame/patch embeddings per the assignment).
+
+Sharding: only logical axes (core/plan.py).  Embedding and cross-entropy are
+vocab-parallel (Megatron-style shard_map) so full logits are never
+materialized.  The layer scans are the *only* ``while`` loops in any step
+function — launch/dryrun.py relies on this for exact loop-corrected cost
+accounting (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+try:
+    from jax import shard_map as _shard_map_fn
+    def shard_map(f, mesh, in_specs, out_specs, check_rep=False):
+        return _shard_map_fn(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_rep)
+except ImportError:  # older jax
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .attention import attention, attn_defs, cross_attention, cross_kv
+from .layers import apply_norm, mlp, mlp_defs, norm_defs
+from .moe import moe_block, moe_defs
+from .params import ParamDef, init_params, shape_structs
+from .ssm import mamba2_block, mamba2_defs, mamba2_state_defs
+from .xlstm import (mlstm_block, mlstm_defs, mlstm_state_defs, slstm_block,
+                    slstm_defs, slstm_state_defs)
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel embedding / cross entropy
+# ---------------------------------------------------------------------------
+def vocab_parallel_embed(tokens, emb, plan):
+    mesh = plan.mesh
+    b_ax, m_ax = plan.axes("batch"), plan.axes("tp")
+    if m_ax is None:
+        return emb[tokens].astype(jnp.bfloat16)
+    b_ax = plan._fit_dim(tokens.shape[0], "batch")
+    tp = plan.tp
+    V = emb.shape[0]
+    Vl = V // tp
+    S = tokens.shape[1]
+    seq_scatter = (S % tp == 0) and plan.sequence_parallel
+
+    def body(tok, emb_l):
+        idx = lax.axis_index(m_ax)
+        loc = tok - idx * Vl
+        ok = (loc >= 0) & (loc < Vl)
+        e = emb_l[jnp.clip(loc, 0, Vl - 1)] * ok[..., None].astype(emb_l.dtype)
+        e = e.astype(jnp.bfloat16)
+        if seq_scatter:
+            return lax.psum_scatter(e, m_ax, scatter_dimension=1, tiled=True)
+        return lax.psum(e, m_ax)
+
+    out_spec = P(b_ax, m_ax if seq_scatter else None, None)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(b_ax, None), P("model", None)),
+                     out_specs=out_spec, check_rep=False)(tokens, emb)
+
+
+def vocab_parallel_ce(x, unemb, labels, mask, plan, chunks: int = 1):
+    """Mean CE over masked tokens; logits never materialized beyond a
+    (B_loc, S/chunks, V/tp) fp32 tile.  x: (B,S,d) seq-sharded; labels (B,S)."""
+    mesh = plan.mesh
+    b_ax, m_ax = plan.axes("batch"), plan.axes("tp")
+    if m_ax is None:
+        logits = jnp.einsum("bsd,dv->bsv", x, unemb).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        lab = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        nll = (lse - lab) * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    tp = plan.tp
+    b_ax = plan._fit_dim(x.shape[0], "batch")
+    V = unemb.shape[1]
+    Vl = V // tp
+
+    def body(xl, w_l, lab, msk):
+        # xl: (B_loc, S or S/tp, d) — gather seq if sp-sharded
+        if xl.shape[1] != lab.shape[1]:
+            xl = lax.all_gather(xl, m_ax, axis=1, tiled=True)
+        idx = lax.axis_index(m_ax)
+        lo = idx * Vl
+        S = xl.shape[1]
+        cs = max(1, S // max(chunks, 1))
+        nll_parts = []
+        for c0 in range(0, S, cs):
+            xc = xl[:, c0:c0 + cs]
+            lc = lab[:, c0:c0 + cs]
+            lg = jnp.einsum("bsd,dv->bsv", xc, w_l).astype(jnp.float32)
+            # stop-grad on the max: exact (lse is shift-invariant) and pmax
+            # has no transpose rule
+            mx = lax.pmax(jax.lax.stop_gradient(jnp.max(lg, -1)), m_ax)
+            ssum = lax.psum(jnp.sum(jnp.exp(lg - mx[..., None]), -1), m_ax)
+            lse = jnp.log(ssum) + mx
+            loc = lc - lo
+            ok = (loc >= 0) & (loc < Vl)
+            ll = jnp.take_along_axis(lg, jnp.clip(loc, 0, Vl - 1)[..., None],
+                                     -1)[..., 0]
+            ll = lax.psum(ll * ok.astype(jnp.float32), m_ax)
+            nll_parts.append(lse - ll)
+        nll = jnp.concatenate(nll_parts, axis=1) if len(nll_parts) > 1 \
+            else nll_parts[0]
+        loss = jnp.sum(nll * msk)
+        cnt = jnp.sum(msk)
+        return lax.pmean(loss, b_ax), lax.pmean(cnt, b_ax)
+
+    x_seq_ax = m_ax if (plan.sequence_parallel
+                        and x.shape[1] % tp == 0) else None
+    loss, cnt = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(b_ax, x_seq_ax, None), P(None, "model"),
+                  P(b_ax, None), P(b_ax, None)),
+        out_specs=(P(), P()), check_rep=False)(x, unemb, labels, mask)
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _residual(x, delta, plan):
+    return plan.constrain(x + delta, "batch", "sp", None)
+
+
+def dense_block(x, p, cfg, plan, *, mode, cache=None, positions=None,
+                pos_offset=0, mrope_positions=None, causal=True,
+                window=0, moe=False):
+    aux = {}
+    xn = apply_norm(x, p["ln1"], cfg.norm)
+    a, new_cache = attention(
+        xn, p["attn"], cfg, plan, positions=positions, causal=causal,
+        window=window, cache=cache, cache_pos=pos_offset,
+        mrope_positions=mrope_positions,
+        q_block=cfg.q_block, kv_block=cfg.kv_block)
+    x = _residual(x, a, plan)
+    xn = apply_norm(x, p["ln2"], cfg.norm)
+    if moe:
+        m, aux = moe_block(xn, p["moe"], cfg, plan)
+    else:
+        m = mlp(xn, p["mlp"], cfg.act, plan)
+    x = _residual(x, m, plan)
+    return x, new_cache, aux
+
+
+def dense_defs(cfg, layers, moe=False, kind_cfg=None):
+    d = {
+        "ln1": norm_defs(cfg.d_model, cfg.norm, layers),
+        "ln2": norm_defs(cfg.d_model, cfg.norm, layers),
+        "attn": attn_defs(cfg, layers),
+    }
+    if moe:
+        d["moe"] = moe_defs(cfg, layers)
+    else:
+        d["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff, layers)
+    return d
+
+
+def apply_block(kind, x, p, cfg, plan, *, mode, cache=None, positions=None,
+                pos_offset=0, mrope_positions=None, enc_out=None):
+    """Uniform block dispatch. Returns (x, new_cache, aux)."""
+    window = cfg.window if cfg.attn_kind == "swa" else 0
+    if kind in ("dense", "moe"):
+        return dense_block(x, p, cfg, plan, mode=mode, cache=cache,
+                           positions=positions, pos_offset=pos_offset,
+                           mrope_positions=mrope_positions,
+                           causal=True, window=window, moe=(kind == "moe"))
+    if kind == "shared_attn":
+        return dense_block(x, p, cfg, plan, mode=mode, cache=cache,
+                           positions=positions, pos_offset=pos_offset,
+                           causal=True, window=cfg.shared_attn_window)
+    if kind == "enc":
+        return dense_block(x, p, cfg, plan, mode=mode, cache=None,
+                           positions=positions, causal=False, window=0)
+    if kind == "dec":
+        aux = {}
+        xn = apply_norm(x, p["ln1"], cfg.norm)
+        a, new_self = attention(xn, p["attn"], cfg, plan, positions=positions,
+                                causal=True, window=0, cache=(
+                                    cache["self"] if isinstance(cache, dict)
+                                    else cache),
+                                cache_pos=pos_offset,
+                                q_block=cfg.q_block, kv_block=cfg.kv_block)
+        x = _residual(x, a, plan)
+        xn = apply_norm(x, p["ln_x"], cfg.norm)
+        if isinstance(cache, dict):         # decode: cached cross-kv
+            ckv = cache["cross"]
+        else:
+            ckv = cross_kv(enc_out, p["xattn"], cfg, plan)
+        ca = cross_attention(xn, p["xattn"], ckv, cfg, plan)
+        x = _residual(x, ca, plan)
+        xn = apply_norm(x, p["ln2"], cfg.norm)
+        x = _residual(x, mlp(xn, p["mlp"], cfg.act, plan), plan)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"self": new_self, "cross": ckv}
+        return x, new_cache, aux
+    if kind == "mamba2":
+        x, st = mamba2_block(x, p, cfg, plan, state=cache, chunk=cfg.gla_chunk)
+        return x, st, {}
+    if kind == "mlstm":
+        x, st = mlstm_block(x, p, cfg, plan, state=cache, chunk=cfg.gla_chunk)
+        return x, st, {}
+    if kind == "slstm":
+        x, st = slstm_block(x, p, cfg, plan, state=cache)
+        return x, st, {}
+    raise ValueError(kind)
+
+
+def block_defs(kind, cfg, layers):
+    if kind == "dense":
+        return dense_defs(cfg, layers)
+    if kind == "moe":
+        return dense_defs(cfg, layers, moe=True)
+    if kind in ("shared_attn", "enc"):
+        return dense_defs(cfg, layers)
+    if kind == "dec":
+        return {
+            "ln1": norm_defs(cfg.d_model, cfg.norm, layers),
+            "ln_x": norm_defs(cfg.d_model, cfg.norm, layers),
+            "ln2": norm_defs(cfg.d_model, cfg.norm, layers),
+            "attn": attn_defs(cfg, layers),
+            "xattn": attn_defs(cfg, layers),
+            "mlp": mlp_defs(cfg.d_model, cfg.d_ff, layers),
+        }
+    if kind == "mamba2":
+        return mamba2_defs(cfg, layers)
+    if kind == "mlstm":
+        return mlstm_defs(cfg, layers)
+    if kind == "slstm":
+        return slstm_defs(cfg, layers)
+    raise ValueError(kind)
+
+
+def _cache_struct(kind, cfg, B, S_max, layers):
+    """(shape, dtype, axes) templates for one stack's decode cache."""
+    if kind in ("dense", "moe", "shared_attn", "enc", "dec"):
+        from .attention import _cache_axes
+        ca = ("layers",) + _cache_axes(cfg)
+        def kvd(S):
+            return {"k": ((layers, B, S, cfg.n_kv_heads, cfg.head_dim),
+                          jnp.bfloat16, ca),
+                    "v": ((layers, B, S, cfg.n_kv_heads, cfg.head_dim),
+                          jnp.bfloat16, ca)}
+        if kind == "dec":
+            return {"self": kvd(S_max), "cross": kvd(cfg.enc_len)}
+        return kvd(S_max)
+    if kind == "mamba2":
+        return mamba2_state_defs(cfg, B, layers)
+    if kind == "mlstm":
+        return mlstm_state_defs(cfg, B, layers)
+    if kind == "slstm":
+        return slstm_state_defs(cfg, B, layers)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+class LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- parameters -----------------------------------------------------------
+    def param_defs(self):
+        cfg = self.cfg
+        d: Dict[str, Any] = {
+            "embed": {"emb": ParamDef((cfg.vocab, cfg.d_model),
+                                      ("tp", "fsdp"), init="embed",
+                                      scale=0.02)},
+            "final_norm": norm_defs(cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            d["embed"]["unemb"] = ParamDef((cfg.d_model, cfg.vocab),
+                                           ("fsdp", "tp"))
+        stacks = {}
+        for kind, total in cfg.stack_sizes().items():
+            if kind == "shared_attn":
+                d["shared"] = block_defs("shared_attn", cfg, None)
+            else:
+                stacks[kind] = block_defs(kind, cfg, total)
+        d["stacks"] = stacks
+        if cfg.family == "encdec":
+            d["enc_norm"] = norm_defs(cfg.d_model, cfg.norm)
+        return d
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    # -- segment runner ---------------------------------------------------------
+    def _run_segments(self, params, x, *, mode, caches=None, positions=None,
+                      pos_offset=0, mrope_positions=None, enc_out=None,
+                      segments=None):
+        """Run the segment list; returns (x, new_caches, aux_sum)."""
+        cfg = self.cfg
+        segments = segments if segments is not None else cfg.segments
+        offsets = {k: 0 for k, _ in segments}
+        shared_i = 0
+        aux_tot = {}
+        new_caches: Dict[str, Any] = {}
+
+        def add_aux(a):
+            for k, v in a.items():
+                aux_tot[k] = aux_tot.get(k, 0.0) + v
+
+        for kind, count in segments:
+            if kind == "shared_attn":
+                p = params["shared"]
+                if mode == "train":
+                    cache_l = None
+                elif mode == "prefill":
+                    cache_l = "init"
+                else:
+                    cache_l = jax.tree.map(lambda t: t[shared_i],
+                                           caches["shared_attn"])
+                if mode == "train":
+                    blk = jax.checkpoint(
+                        lambda xx, pp: apply_block(
+                            "shared_attn", xx, pp, cfg, self._plan, mode=mode,
+                            cache=None, positions=positions,
+                            pos_offset=pos_offset)[0])
+                    x = blk(x, p)
+                    nc = None
+                else:
+                    x, nc, aux = apply_block(
+                        "shared_attn", x, p, cfg, self._plan, mode=mode,
+                        cache=cache_l, positions=positions,
+                        pos_offset=pos_offset)
+                if nc is not None:
+                    new_caches.setdefault("shared_attn", []).append(nc)
+                shared_i += 1
+                continue
+
+            start = offsets[kind]
+            offsets[kind] = start + count
+            stack = jax.tree.map(lambda t: t[start:start + count],
+                                 params["stacks"][kind])
+            plan = self._plan
+
+            if mode == "train":
+                def body(carry, pl, _kind=kind):
+                    xx, aux_c = carry
+                    def blk(xx, pl):
+                        y, _, aux = apply_block(
+                            _kind, xx, pl, cfg, plan, mode="train",
+                            positions=positions,
+                            mrope_positions=mrope_positions, enc_out=enc_out)
+                        return y, aux
+                    y, aux = jax.checkpoint(blk)(xx, pl)
+                    aux_c = {k: aux_c.get(k, 0.0) + v for k, v in aux.items()} \
+                        if aux else aux_c
+                    return (y, aux_c), None
+                aux0 = {"moe_lb": jnp.zeros((), jnp.float32),
+                        "moe_z": jnp.zeros((), jnp.float32)} \
+                    if kind == "moe" else {}
+                (x, aux_c), _ = lax.scan(body, (x, aux0), stack)
+                add_aux(aux_c)
+            elif mode == "prefill":
+                def body(xx, pl, _kind=kind):
+                    y, nc, _ = apply_block(
+                        _kind, xx, pl, cfg, plan, mode="prefill",
+                        cache="init", positions=positions,
+                        mrope_positions=mrope_positions, enc_out=enc_out)
+                    return y, nc
+                x, ncs = lax.scan(body, x, stack)
+                new_caches.setdefault(kind, []).append(ncs)
+            else:  # decode
+                cache_stack = jax.tree.map(
+                    lambda t: t[start:start + count], caches[kind])
+                def body(xx, pc, _kind=kind):
+                    pl, cl = pc
+                    y, nc, _ = apply_block(
+                        _kind, xx, pl, cfg, plan, mode="decode",
+                        cache=cl, positions=positions, pos_offset=pos_offset,
+                        mrope_positions=mrope_positions, enc_out=enc_out)
+                    return y, nc
+                x, ncs = lax.scan(body, x, (stack, cache_stack))
+                new_caches.setdefault(kind, []).append(ncs)
+
+        # concatenate per-kind cache pieces back into full stacks
+        out_caches = {}
+        for kind, pieces in new_caches.items():
+            if kind == "shared_attn":
+                out_caches[kind] = jax.tree.map(
+                    lambda *ts: jnp.stack(ts, 0), *pieces) \
+                    if len(pieces) > 1 else jax.tree.map(
+                        lambda t: t[None], pieces[0])
+            else:
+                out_caches[kind] = jax.tree.map(
+                    lambda *ts: jnp.concatenate(ts, 0), *pieces) \
+                    if len(pieces) > 1 else pieces[0]
+        return x, out_caches, aux_tot
+
+    # -- entry points -------------------------------------------------------------
+    def _embed_in(self, params, batch, plan):
+        cfg = self.cfg
+        if cfg.family == "vlm" and "embeds" in batch:
+            x = batch["embeds"].astype(jnp.bfloat16)
+            x = plan.constrain(x, "batch", "sp", None)
+        else:
+            x = vocab_parallel_embed(batch["tokens"], params["embed"]["emb"],
+                                     plan)
+            x = plan.constrain(x, "batch", "sp", None)
+        return x
+
+    def loss(self, params, batch, plan):
+        cfg = self.cfg
+        self._plan = plan
+        if cfg.family == "encdec":
+            return self._encdec_loss(params, batch, plan)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed_in(params, batch, plan)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        mrope = batch.get("mrope_positions") if cfg.mrope else None
+        x, _, aux = self._run_segments(params, x, mode="train",
+                                       positions=positions,
+                                       mrope_positions=mrope)
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
+        unemb = params["embed"].get("unemb")
+        if unemb is None:
+            unemb = params["embed"]["emb"].T
+        loss = vocab_parallel_ce(x, unemb, labels, mask, plan,
+                                 chunks=cfg.loss_chunks)
+        metrics = {"ce": loss}
+        if aux:
+            loss = loss + 0.01 * aux.get("moe_lb", 0.0) \
+                + 0.001 * aux.get("moe_z", 0.0)
+            metrics.update(aux)
+        return loss, metrics
+
+    def _encdec_loss(self, params, batch, plan):
+        cfg = self.cfg
+        frames = batch["frames"].astype(jnp.bfloat16)   # (B, S_enc, d) stub
+        tokens = batch["tokens"]                        # (B, S_dec)
+        B, S_dec = tokens.shape
+        enc_x = plan.constrain(frames, "batch", "sp", None)
+        pos_e = jnp.broadcast_to(jnp.arange(enc_x.shape[1])[None],
+                                 (B, enc_x.shape[1]))
+        enc_x, _, _ = self._run_segments(
+            params, enc_x, mode="train", positions=pos_e,
+            segments=[("enc", cfg.enc_layers)])
+        enc_out = apply_norm(enc_x, params["enc_norm"], cfg.norm)
+        x = vocab_parallel_embed(tokens, params["embed"]["emb"], plan)
+        x = plan.constrain(x, "batch", "sp", None)
+        pos_d = jnp.broadcast_to(jnp.arange(S_dec)[None], (B, S_dec))
+        x, _, _ = self._run_segments(
+            params, x, mode="train", positions=pos_d, enc_out=enc_out,
+            segments=[("dec", cfg.dec_layers)])
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones((B, S_dec), jnp.float32).at[:, -1].set(0.0)
+        unemb = params["embed"].get("unemb")
+        if unemb is None:
+            unemb = params["embed"]["emb"].T
+        loss = vocab_parallel_ce(x, unemb, labels, mask, plan,
+                                 chunks=cfg.loss_chunks)
+        return loss, {"ce": loss}
+
+    # -- serving -----------------------------------------------------------------
+    def prefill(self, params, batch, plan, cache_len: Optional[int] = None):
+        """Process the prompt; returns (last-position logits (B,1,V) vocab-
+        sharded, caches padded to ``cache_len``)."""
+        cfg = self.cfg
+        self._plan = plan
+        if cache_len is not None:
+            cfg.cache_len = (min(cache_len, cfg.window)
+                             if cfg.attn_kind == "swa" else cache_len)
+        if cfg.family == "encdec":
+            return self._encdec_prefill(params, batch, plan)
+        tokens = batch.get("tokens")
+        if cfg.family == "vlm" and "embeds" in batch:
+            x = batch["embeds"].astype(jnp.bfloat16)
+            B, S = x.shape[:2]
+            x = plan.constrain(x, "batch", "sp", None)
+        else:
+            B, S = tokens.shape
+            x = self._embed_in(params, batch, plan)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        mrope = batch.get("mrope_positions") if cfg.mrope else None
+        x, caches, _ = self._run_segments(params, x, mode="prefill",
+                                          positions=positions,
+                                          mrope_positions=mrope)
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        x_last = x[:, -1:]
+        unemb = params["embed"].get("unemb")
+        if unemb is None:
+            unemb = params["embed"]["emb"].T
+        logits = jnp.einsum("bsd,dv->bsv", x_last, unemb)
+        logits = plan.constrain(logits, "batch", None, "tp")
+        return logits, caches
+
+    def _encdec_prefill(self, params, batch, plan):
+        cfg = self.cfg
+        frames = batch["frames"].astype(jnp.bfloat16)
+        tokens = batch["tokens"]
+        B, S_dec = tokens.shape
+        enc_x = plan.constrain(frames, "batch", "sp", None)
+        pos_e = jnp.broadcast_to(jnp.arange(enc_x.shape[1])[None],
+                                 (B, enc_x.shape[1]))
+        enc_x, _, _ = self._run_segments(
+            params, enc_x, mode="prefill", positions=pos_e,
+            segments=[("enc", cfg.enc_layers)])
+        enc_out = apply_norm(enc_x, params["enc_norm"], cfg.norm)
+        x = vocab_parallel_embed(tokens, params["embed"]["emb"], plan)
+        x = plan.constrain(x, "batch", "sp", None)
+        pos_d = jnp.broadcast_to(jnp.arange(S_dec)[None], (B, S_dec))
+        x, caches, _ = self._run_segments(
+            params, x, mode="prefill", positions=pos_d, enc_out=enc_out,
+            segments=[("dec", cfg.dec_layers)])
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        unemb = params["embed"].get("unemb")
+        if unemb is None:
+            unemb = params["embed"]["emb"].T
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], unemb)
+        return plan.constrain(logits, "batch", None, "tp"), caches
+
+    def decode_step(self, params, caches, batch, plan):
+        """One token for every sequence.  batch: {'token': (B,1), 'pos': ()}.
+        Returns (logits (B,1,V) vocab-sharded, new caches)."""
+        cfg = self.cfg
+        self._plan = plan
+        tok = batch["token"]
+        B = tok.shape[0]
+        pos = batch["pos"]
+        if getattr(pos, "ndim", 0) == 1:      # per-sequence positions
+            positions = pos[:, None].astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(pos[None, None],
+                                         (B, 1)).astype(jnp.int32)
+        if cfg.family == "vlm" and "embeds" in batch:
+            x = batch["embeds"].astype(jnp.bfloat16)
+        else:
+            x = vocab_parallel_embed(tok, params["embed"]["emb"], plan)
+        mrope = batch.get("mrope_positions") if cfg.mrope else None
+        cache_pos = self._cache_write_pos(pos)
+        segs = [("dec", cfg.dec_layers)] if cfg.family == "encdec" else None
+        x, new_caches, _ = self._run_segments(
+            params, x, mode="decode", caches=caches, positions=positions,
+            pos_offset=cache_pos, mrope_positions=mrope, segments=segs)
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        unemb = params["embed"].get("unemb")
+        if unemb is None:
+            unemb = params["embed"]["emb"].T
+        logits = jnp.einsum("bsd,dv->bsv", x, unemb)
+        logits = plan.constrain(logits, "batch", None, "tp")
+        return logits, new_caches
+
+    def _cache_write_pos(self, pos):
+        cfg = self.cfg
+        if cfg.attn_kind == "swa" and cfg.cache_len == cfg.window:
+            return jnp.mod(pos, cfg.window)
+        return pos
+
+    def cache_defs(self, B: int, S_max: int):
+        """Tree of (shape, dtype, axes) for the decode caches."""
+        cfg = self.cfg
+        S_eff = min(S_max, cfg.window) if cfg.attn_kind == "swa" else S_max
+        cfg.cache_len = S_eff
+        out = {}
+        for kind, total in cfg.stack_sizes().items():
+            L = total
+            if cfg.family == "encdec" and kind == "enc":
+                continue
+            out[kind] = _cache_struct(kind, cfg, B,
+                                      S_eff if kind != "dec" else S_eff, L)
+        return out
+
+    # -- dry-run metadata -----------------------------------------------------------
+    def loop_specs(self, mode: str):
+        """[(kind, trips, scan_instances)] for cost correction."""
+        cfg = self.cfg
+        segs = cfg.segments
+        if cfg.family == "encdec" and mode == "decode":
+            segs = [("dec", cfg.dec_layers)]
+        agg: Dict[str, list] = {}
+        for kind, count in segs:
+            if kind == "shared_attn":
+                continue  # unrolled, counted raw
+            agg.setdefault(kind, [0, 0])
+            agg[kind][0] += count
+            agg[kind][1] += 1
+        return [(k, v[0], v[1]) for k, v in agg.items()]

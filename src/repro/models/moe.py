@@ -1,0 +1,204 @@
+"""MoE block — the farm skeleton with a *learned* load balancer.
+
+Paper mapping (Sec. 8.3): the router is an ``ff_loadbalancer`` whose
+``selectworker`` is a trained top-k policy; capacity-bounded dispatch is the
+bounded SPSC lane (tasks beyond capacity are dropped instead of blocking —
+an SPMD program cannot block); the all-to-all is the MPMC network moving
+tasks from token shards (producers) to expert shards (consumers); the
+combine is the collector weighting worker results; the aux load-balance loss
+is the *on-demand scheduling* pressure pushing the emitter towards uniform
+lane occupancy.
+
+Two lowerings, chosen per architecture:
+  mode='ep'  (E % tp == 0, e.g. kimi-k2 384e/16): experts sharded over the
+             model axis; tokens stay sequence-sharded; all-to-all dispatch.
+  mode='tp'  (E < tp, e.g. mixtral 8e): experts replicated, expert FFN
+             tensor-parallel over the model axis; tokens gathered over the
+             model axis for dispatch, outputs reduce-scattered back.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+try:
+    from jax import shard_map as _shard_map_fn
+    def shard_map(f, mesh, in_specs, out_specs, check_rep=False):
+        return _shard_map_fn(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_rep)
+except ImportError:  # older jax
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.device import expert_capacity
+from .params import ParamDef
+
+
+def moe_defs(cfg, layers: Optional[int] = None):
+    lead = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    E, dff = cfg.n_experts, cfg.moe_d_ff
+    ex_ax = "expert" if cfg.moe_mode == "ep" else None
+    ff_ax = None if cfg.moe_mode == "ep" else "tp"
+    d = {
+        "router": ParamDef(lead + (cfg.d_model, E), la + ("fsdp", None),
+                           dtype=jnp.float32),
+        "wi": ParamDef(lead + (E, cfg.d_model, dff), la + (ex_ax, "fsdp", ff_ax)),
+        "wg": ParamDef(lead + (E, cfg.d_model, dff), la + (ex_ax, "fsdp", ff_ax)),
+        "wo": ParamDef(lead + (E, dff, cfg.d_model), la + (ex_ax, ff_ax, "fsdp")),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.moe_d_ff * cfg.n_shared_experts
+        d["shared"] = {
+            "wi": ParamDef(lead + (cfg.d_model, sff), la + ("fsdp", "tp")),
+            "wg": ParamDef(lead + (cfg.d_model, sff), la + ("fsdp", "tp")),
+            "wo": ParamDef(lead + (sff, cfg.d_model), la + ("tp", "fsdp")),
+        }
+    return d
+
+
+def _route(x2d, wr, top_k: int):
+    """Router: returns (probs(T,E) f32, topk_w(T,K), topk_idx(T,K), aux)."""
+    logits = x2d.astype(jnp.float32) @ wr.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = lax.top_k(probs, top_k)
+    topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance loss + router z-loss
+    E = probs.shape[-1]
+    me = probs.mean(0)                                     # (E,)
+    ce_frac = jnp.zeros((E,), jnp.float32).at[topk_idx.reshape(-1)].add(1.0)
+    ce_frac = ce_frac / jnp.maximum(topk_idx.size, 1)
+    lb = E * jnp.sum(me * ce_frac)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return probs, topk_w, topk_idx, {"lb": lb, "z": z}
+
+
+def _dispatch_local(x2d, topk_idx, topk_w, E: int, C: int):
+    """Capacity-bounded scatter into (E, C, d) + bookkeeping for combine."""
+    T, K = topk_idx.shape
+    flat_e = topk_idx.reshape(T * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (TK, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot
+    pos = pos.sum(-1) - 1                                      # (TK,)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)            # overflow slot
+    buf = jnp.zeros((E * C + 1, x2d.shape[1]), x2d.dtype)
+    xrep = jnp.repeat(x2d, K, axis=0)                          # (TK, d)
+    buf = buf.at[slot].add(xrep)
+    return buf[:-1].reshape(E, C, -1), slot, keep
+
+
+def _combine_local(ybuf, slot, keep, topk_w, T: int, K: int):
+    yflat = ybuf.reshape(-1, ybuf.shape[-1])
+    yflat = jnp.concatenate([yflat, jnp.zeros_like(yflat[:1])], axis=0)
+    got = yflat[slot] * keep[:, None]                          # (TK, d)
+    got = got.reshape(T, K, -1)
+    return jnp.einsum("tkd,tk->td", got.astype(jnp.float32),
+                      topk_w.astype(jnp.float32))
+
+
+def _glu(h, wi, wg, wo):
+    a = jnp.einsum("ecd,edf->ecf", h, wi)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, wg))
+    return jnp.einsum("ecf,efd->ecd", a * g, wo)
+
+
+def moe_block(x, p, cfg, plan):
+    """x: (B, S, d) sharded (batch, sp, -). Returns (out, aux_losses)."""
+    mesh = plan.mesh
+    B, S, _d = x.shape
+    batch_ax = plan._fit_dim(B, "batch")
+    model_ax = plan.axes("tp")
+    E, K = cfg.n_experts, cfg.top_k
+    tp = plan.tp
+    seq_sharded = (S % tp == 0 and S > 1 and plan.sequence_parallel
+                   and model_ax is not None)
+
+    xspec = P(batch_ax, model_ax if seq_sharded else None, None)
+    rspec = P(None, None)
+
+    def _pmean(v):
+        for ax in (model_ax, batch_ax):
+            if ax is not None:
+                v = lax.pmean(v, ax)
+        return v
+    if cfg.moe_mode == "ep":
+        wspec = P("model", None, None)
+    else:
+        wspec = (P(None, None, "model"), P(None, None, "model"),
+                 P(None, "model", None))
+        wspec_i, wspec_g, wspec_o = wspec
+
+    def ep_body(xl, wr, wi, wg, wo):
+        Bl, Sl, d = xl.shape
+        x2 = xl.reshape(Bl * Sl, d)
+        probs, tw, ti, aux = _route(x2, wr, K)
+        C = expert_capacity(Bl * Sl, E, K, cfg.capacity_factor)
+        buf, slot, keep = _dispatch_local(x2, ti, tw, E, C)
+        # MPMC: token shards -> expert shards
+        buf = lax.all_to_all(buf, model_ax, split_axis=0, concat_axis=1,
+                             tiled=True)                  # (E/tp, C*tp, d)
+        y = _glu(buf, wi, wg, wo)
+        y = lax.all_to_all(y, model_ax, split_axis=1, concat_axis=0,
+                           tiled=True)                    # (E, C, d)
+        out = _combine_local(y, slot, keep, tw, Bl * Sl, K)
+        out = out.reshape(Bl, Sl, d).astype(xl.dtype)
+        aux = {k: _pmean(v) for k, v in aux.items()}
+        return out, aux["lb"], aux["z"]
+
+    def tp_body(xl, wr, wi, wg, wo):
+        # tokens gathered over model axis; expert FFN is ff-sharded
+        Bl, Sl, d = xl.shape
+        xg = lax.all_gather(xl, model_ax, axis=1, tiled=True) \
+            if seq_sharded else xl                              # (B, S, d)
+        Sg = xg.shape[1]
+        x2 = xg.reshape(Bl * Sg, d)
+        probs, tw, ti, aux = _route(x2, wr, K)
+        C = expert_capacity(Bl * Sg, E, K, cfg.capacity_factor)
+        buf, slot, keep = _dispatch_local(x2, ti, tw, E, C)
+        y = _glu(buf, wi, wg, wo)                               # partial (ff shard)
+        out = _combine_local(y, slot, keep, tw, Bl * Sg, K)     # partial sums
+        out = out.reshape(Bl, Sg, d).astype(xl.dtype)
+        # Compose: reduce-scatter partials back to seq shards (or psum)
+        if seq_sharded:
+            out = lax.psum_scatter(out, model_ax, scatter_dimension=1,
+                                   tiled=True)
+        elif model_ax is not None:
+            out = lax.psum(out, model_ax)
+        aux = {k: _pmean(v) for k, v in aux.items()}
+        return out, aux["lb"], aux["z"]
+
+    body = ep_body if cfg.moe_mode == "ep" else tp_body
+    if cfg.moe_mode == "ep":
+        in_specs = (xspec, rspec, wspec, wspec, wspec)
+        wax = ("expert", "fsdp", None)
+        oax = ("expert", None, "fsdp")
+    else:
+        in_specs = (xspec, rspec, wspec_i, wspec_g, wspec_o)
+        wax = (None, "fsdp", "tp")
+        oax = (None, "tp", "fsdp")
+    # gather the bf16 expert weights over the fsdp axis *before* the
+    # shard_map boundary (otherwise GSPMD hoists an f32 convert first and
+    # all-gathers 2x the bytes)
+    wi = plan.gather_fsdp(p["wi"], wax)
+    wg = plan.gather_fsdp(p["wg"], wax)
+    wo = plan.gather_fsdp(p["wo"], oax)
+    router = plan.gather_fsdp(p["router"], ("fsdp", None))
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=in_specs,
+                   out_specs=(xspec, P(), P()), check_rep=False)
+    out, lb, z = fn(x, router, wi, wg, wo)
+
+    if cfg.n_shared_experts:
+        sp_ = p["shared"]
+        a = jnp.einsum("bsd,df->bsf", x, sp_["wi"])
+        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sp_["wg"]))
+        out = out + jnp.einsum("bsf,fd->bsd", a * g, sp_["wo"],
+                                preferred_element_type=jnp.bfloat16)
+
+    aux = {"moe_lb": lb, "moe_z": z}
+    return out, aux

@@ -1,0 +1,93 @@
+"""Parameter definition trees.
+
+A model builds a pytree of :class:`ParamDef` leaves; from it we derive
+(1) real initialized parameters (tests/examples), (2) ShapeDtypeStruct
+stand-ins (multi-pod dry-run — never allocated), and (3) NamedShardings via
+the logical axes recorded on every def (consumed by core.plan.ShardingPlan).
+
+Logical dim names used by models:
+  'layers'  stacked scan dim (never sharded)
+  'fsdp'    ZeRO-3 shard dim (-> data axis)
+  'tp'      tensor-parallel dim (-> model axis): heads / ffn / vocab
+  'expert'  expert-parallel dim (-> model axis)
+  None      replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float = 1.0            # fan-in style scale applied by _init_leaf
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(d: ParamDef, key) -> jnp.ndarray:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    # fan-in scaled truncated normal
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    std = d.scale / math.sqrt(max(fan_in, 1))
+    if d.init == "embed":
+        std = d.scale
+    x = jax.random.truncated_normal(key, -2.0, 2.0, d.shape, jnp.float32) * std
+    return x.astype(d.dtype)
+
+
+def init_params(defs, key):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def shape_structs(defs, plan=None):
+    """ShapeDtypeStructs (with shardings when a plan is given): the dry-run
+    stand-ins — no device allocation ever happens."""
+    def leaf(d: ParamDef):
+        if plan is None:
+            return jax.ShapeDtypeStruct(d.shape, d.dtype)
+        return jax.ShapeDtypeStruct(d.shape, d.dtype,
+                                    sharding=plan.sharding_for(d.axes, d.shape))
+    return jax.tree.map(leaf, defs, is_leaf=is_def)
+
+
+def shardings(defs, plan):
+    return jax.tree.map(
+        lambda d: jax.sharding.NamedSharding(
+            plan.mesh, plan.param_spec(d.axes, d.shape)),
+        defs, is_leaf=is_def)
+
+
+def pspecs(defs, plan):
+    return jax.tree.map(lambda d: plan.param_spec(d.axes, d.shape),
+                        defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    return sum(math.prod(d.shape) for d in
+               jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def bytes_params(defs) -> int:
+    return sum(math.prod(d.shape) * jnp.dtype(d.dtype).itemsize
+               for d in jax.tree.leaves(defs, is_leaf=is_def))

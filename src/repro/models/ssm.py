@@ -1,0 +1,211 @@
+"""State-space / linear-recurrence blocks: Mamba2 (SSD) and the shared
+chunked gated-linear-attention primitive.
+
+The recurrence  h_t = a_t * h_{t-1} + k_t (x_t)^T ,  y_t = q_t . h_t
+is computed chunkwise: dense intra-chunk matmuls (MXU work) + an associative
+scan over per-chunk state transforms (log-depth, statically unrolled — no
+``while`` loop, keeping the dry-run cost analysis exact).  This is the
+feedback skeleton (wrap_around) pushed down to the tensor level; the Pallas
+version is kernels/ssd_scan.py.
+
+Decode uses the plain single-step recurrence on a carried state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+from .params import ParamDef
+
+
+def chunked_gla(q, k, v, log_a, chunk: int = 256, plan=None):
+    """y_t = sum_{s<=t} exp(sum_{u=s+1..t} log_a_u) (q_t . k_s) v_s.
+
+    q, k: (B, S, H, N); v: (B, S, H, P); log_a: (B, S, H) (<= 0).
+    Returns y: (B, S, H, P) and final state (B, H, N, P).
+
+    H-major intermediate layout + explicit sharding constraints keep every
+    (Q, Q) score tile head-sharded under GSPMD (no involuntary
+    rematerialization of (B,NC,Q,Q,H) tensors).
+    """
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    NC = S // Q
+
+    def con(t, *axes):
+        return plan.constrain(t, *axes) if plan is not None else t
+
+    # (B, NC, H, Q, feat)
+    qc = jnp.moveaxis(q.reshape(B, NC, Q, H, N), 3, 2).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(B, NC, Q, H, N), 3, 2).astype(jnp.float32)
+    vc = jnp.moveaxis(v.reshape(B, NC, Q, H, P), 3, 2).astype(jnp.float32)
+    la = jnp.moveaxis(log_a.reshape(B, NC, Q, H), 3, 2).astype(jnp.float32)
+    qc = con(qc, "batch", None, "tp", None, None)
+    kc = con(kc, "batch", None, "tp", None, None)
+    vc = con(vc, "batch", None, "tp", None, None)
+    la = con(la, "batch", None, "tp", None)
+
+    cum = jnp.cumsum(la, axis=3)                      # (B,NC,H,Q) inclusive
+    tot = cum[:, :, :, -1]                            # (B,NC,H)
+
+    # intra-chunk: scores[t,s] = q_t.k_s * exp(cum_t - cum_s) for s<=t
+    scores = jnp.einsum("bchtn,bchsn->bchts", qc, kc)
+    decay = jnp.exp(jnp.clip(cum[:, :, :, :, None] - cum[:, :, :, None, :],
+                             -60.0, 0.0))             # (B,NC,H,t,s)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    w = scores * decay * mask[None, None, None]
+    w = con(w, "batch", None, "tp", None, None)
+    y_intra = jnp.einsum("bchts,bchsp->bchtp", w, vc)
+
+    # per-chunk state increment: I_c = sum_s exp(tot - cum_s) k_s v_s^T
+    dk = jnp.exp(jnp.clip(tot[..., None] - cum, -60.0, 0.0))     # (B,NC,H,Q)
+    inc = jnp.einsum("bchsn,bchs,bchsp->bchnp", kc, dk, vc)      # (B,NC,H,N,P)
+    a_tot = jnp.exp(jnp.clip(tot, -60.0, 0.0))                   # (B,NC,H)
+
+    # associative scan of transforms S -> a S + I  (composition law)
+    def combine(x, y):
+        a1, i1 = x
+        a2, i2 = y
+        return a1 * a2, a2[..., None, None] * i1 + i2
+
+    a_sc, i_sc = jax.lax.associative_scan(combine, (a_tot, inc), axis=1)
+    # state BEFORE chunk c: shift right
+    zero = jnp.zeros_like(inc[:, :1])
+    s_before = jnp.concatenate([zero, i_sc[:, :-1]], axis=1)     # (B,NC,H,N,P)
+    s_final = i_sc[:, -1]                                        # (B,H,N,P)
+
+    # inter-chunk contribution: y_t += exp(cum_t) q_t . S_before
+    y_inter = jnp.einsum("bchtn,bcht,bchnp->bchtp", qc,
+                         jnp.exp(jnp.clip(cum, -60.0, 0.0)), s_before)
+    y = jnp.moveaxis(y_intra + y_inter, 2, 3).reshape(B, S, H, P)
+    return y, s_final
+
+
+def gla_step(state, q, k, v, log_a):
+    """Single decode step: state (B,H,N,P); q/k (B,1,H,N); v (B,1,H,P)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[:, 0, :, None, None]  # (B,H,1,1)
+    kv = jnp.einsum("bhn,bhp->bhnp", k[:, 0].astype(jnp.float32),
+                    v[:, 0].astype(jnp.float32))
+    state = state * a + kv
+    y = jnp.einsum("bhn,bhnp->bhp", q[:, 0].astype(jnp.float32), state)
+    return state, y[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def mamba2_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    return d_inner, n_heads
+
+
+def mamba2_defs(cfg, layers: Optional[int] = None):
+    d_inner, H = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    K = cfg.ssm_conv
+    lead = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "norm": {"w": ParamDef(lead + (cfg.d_model,), la + (None,), init="zeros")},
+        "wz": ParamDef(lead + (cfg.d_model, d_inner), la + ("fsdp", "tp")),
+        "wx": ParamDef(lead + (cfg.d_model, d_inner), la + ("fsdp", "tp")),
+        "wB": ParamDef(lead + (cfg.d_model, G, N), la + ("fsdp", None, None)),
+        "wC": ParamDef(lead + (cfg.d_model, G, N), la + ("fsdp", None, None)),
+        "wdt": ParamDef(lead + (cfg.d_model, H), la + ("fsdp", "tp")),
+        "dt_bias": ParamDef(lead + (H,), la + ("tp",), init="zeros"),
+        "A_log": ParamDef(lead + (H,), la + ("tp",), init="zeros"),
+        "D": ParamDef(lead + (H,), la + ("tp",), init="zeros"),
+        "conv": ParamDef(lead + (K, d_inner), la + (None, "tp")),
+        "wo": ParamDef(lead + (d_inner, cfg.d_model), la + ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along seq: x (B,S,C), w (K,C).
+    With ``state`` (B,K-1,C) this is the decode step (S==1)."""
+    K = w.shape[0]
+    if state is not None:
+        buf = jnp.concatenate([state, x], axis=1)          # (B,K,C)
+        y = jnp.einsum("bkc,kc->bc", buf.astype(jnp.float32),
+                       w.astype(jnp.float32))[:, None]
+        return y.astype(x.dtype), buf[:, 1:]
+    pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B,S+K-1,C)
+    y = sum(xp[:, i:i + x.shape[1]].astype(jnp.float32)
+            * w[i].astype(jnp.float32) for i in range(K))
+    return y.astype(x.dtype), xp[:, -(K - 1):] if K > 1 else None
+
+
+def mamba2_block(x, p, cfg, plan, *, state=None, chunk: int = 256):
+    """state: None (train) | 'init' (prefill: return final state) |
+    dict {ssm, conv} (decode step)."""
+    B, S, _ = x.shape
+    d_inner, H = mamba2_dims(cfg)
+    N, G, P = cfg.ssm_state, cfg.ssm_groups, cfg.ssm_headdim
+    decode = isinstance(state, dict)
+
+    xn = rms_norm(x, p["norm"]["w"])
+    if S > 1:
+        xn = plan.constrain(xn, "batch", None, None)   # SP gather (bf16)
+    wz = plan.gather_fsdp(p["wz"], ("fsdp", "tp"))
+    wx = plan.gather_fsdp(p["wx"], ("fsdp", "tp"))
+    z = jnp.einsum("bsd,de->bse", xn, wz)
+    xi = jnp.einsum("bsd,de->bse", xn, wx)
+    Bm = jnp.einsum("bsd,dgn->bsgn", xn, p["wB"])
+    Cm = jnp.einsum("bsd,dgn->bsgn", xn, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", xn, p["wdt"]) + p["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))            # (B,S,H)
+
+    xi = plan.constrain(xi, "batch", None, "tp")
+    conv_state = state.get("conv") if decode else None
+    xi, new_conv = _causal_conv(xi, p["conv"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,) negative
+    log_a = dt * A[None, None, :]                           # (B,S,H)
+    xh = xi.reshape(B, S, H, P)
+    dtx = xh.astype(jnp.float32) * dt[..., None]
+    # expand groups to heads
+    rep = H // G
+    k = jnp.repeat(Bm, rep, axis=2)                         # (B,S,H,N)
+    q = jnp.repeat(Cm, rep, axis=2)
+
+    if decode:
+        new_ssm, y = gla_step(state["ssm"], q, k, dtx, log_a)
+        new_state = {"ssm": new_ssm, "conv": new_conv}
+    else:
+        y, s_final = chunked_gla(q, k, dtx, log_a, chunk=chunk, plan=plan)
+        new_state = None
+        if state == "init":
+            new_state = {"ssm": s_final,
+                         "conv": new_conv if new_conv is not None else
+                         jnp.zeros((B, cfg.ssm_conv - 1, d_inner), x.dtype)}
+
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    wo = plan.gather_fsdp(p["wo"], ("tp", "fsdp"))
+    out = jnp.einsum("bse,ed->bsd", y, wo,
+                     preferred_element_type=jnp.bfloat16)
+    out = plan.constrain(out, "batch", "sp", None)
+    return x + out, new_state
+
+
+def mamba2_state_defs(cfg, B: int, layers: int):
+    """ShapeDtype templates for the decode state (used by input_specs)."""
+    d_inner, H = mamba2_dims(cfg)
+    return {
+        "ssm": ((layers, B, H, cfg.ssm_state, cfg.ssm_headdim), jnp.float32,
+                ("layers", "batch", "tp", None, None)),
+        "conv": ((layers, B, cfg.ssm_conv - 1, d_inner), jnp.bfloat16,
+                 ("layers", "batch", None, "tp")),
+    }

@@ -1,0 +1,168 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Both reuse the chunked gated-linear-attention primitive of models/ssm.py:
+ - mLSTM:  C_t = f_t C_{t-1} + i_t v_t k_t^T ;  h = o( q.C / max(|q.n|,1) )
+   (the normalizer n_t uses the same recurrence with v == 1).
+ - sLSTM:  per-unit scalar recurrence  c_t = f_t c_{t-1} + i_t z_t,
+   n_t = f_t n_{t-1} + i_t, h = o * c/n — computed with a log-depth
+   associative scan.  NOTE (hardware adaptation, see DESIGN.md): the
+   hidden-to-hidden recurrence matrix R of the paper's sLSTM serializes the
+   whole sequence and has no parallel form; we drop R (gates depend on the
+   input only), which is the standard parallelizable variant.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+from .params import ParamDef
+from .ssm import chunked_gla, gla_step, _causal_conv
+
+
+def mlstm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    P = d_inner // H
+    return d_inner, H, P
+
+
+def mlstm_defs(cfg, layers: Optional[int] = None):
+    d_inner, H, P = mlstm_dims(cfg)
+    K = cfg.ssm_conv
+    lead = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "norm": {"w": ParamDef(lead + (cfg.d_model,), la + (None,), init="zeros")},
+        "wup": ParamDef(lead + (cfg.d_model, d_inner), la + ("fsdp", "tp")),
+        "wgate": ParamDef(lead + (cfg.d_model, d_inner), la + ("fsdp", "tp")),
+        "conv": ParamDef(lead + (K, d_inner), la + (None, "tp")),
+        "wq": ParamDef(lead + (d_inner, d_inner), la + ("fsdp", "tp")),
+        "wk": ParamDef(lead + (d_inner, d_inner), la + ("fsdp", "tp")),
+        "wv": ParamDef(lead + (d_inner, d_inner), la + ("fsdp", "tp")),
+        "wi": ParamDef(lead + (d_inner, H), la + ("fsdp", "tp")),
+        "wf": ParamDef(lead + (d_inner, H), la + ("fsdp", "tp")),
+        "wo": ParamDef(lead + (d_inner, cfg.d_model), la + ("tp", "fsdp")),
+    }
+
+
+def mlstm_block(x, p, cfg, plan, *, state=None, chunk: int = 256):
+    B, S, _ = x.shape
+    d_inner, H, P = mlstm_dims(cfg)
+    decode = isinstance(state, dict)
+
+    xn = rms_norm(x, p["norm"]["w"])
+    if S > 1:
+        xn = plan.constrain(xn, "batch", None, None)
+    wup = plan.gather_fsdp(p["wup"], ("fsdp", "tp"))
+    wgate = plan.gather_fsdp(p["wgate"], ("fsdp", "tp"))
+    up = jnp.einsum("bsd,de->bse", xn, wup)
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", xn, wgate))
+    up = plan.constrain(up, "batch", None, "tp")
+
+    conv_state = state.get("conv") if decode else None
+    c, new_conv = _causal_conv(up, p["conv"], conv_state)
+    c = jax.nn.silu(c)
+
+    q = jnp.einsum("bse,ef->bsf", c, p["wq"]).reshape(B, S, H, P)
+    k = jnp.einsum("bse,ef->bsf", c, p["wk"]).reshape(B, S, H, P) / (P ** 0.5)
+    v = jnp.einsum("bse,ef->bsf", up, p["wv"]).reshape(B, S, H, P)
+    i_gate = jnp.einsum("bse,eh->bsh", c, p["wi"]).astype(jnp.float32)
+    f_gate = jnp.einsum("bse,eh->bsh", c, p["wf"]).astype(jnp.float32)
+    # log decay: log sigmoid(f); input scale: exp-normalized i (stabilized
+    # variant: fold exp(i) into v and the normalizer symmetrically)
+    log_a = jax.nn.log_sigmoid(f_gate)
+    i_scl = jnp.exp(jnp.clip(i_gate, -20.0, 2.0))[..., None]
+    vi = v.astype(jnp.float32) * i_scl
+    ones = jnp.ones(v.shape[:-1] + (1,), jnp.float32) * i_scl
+
+    if decode:
+        new_C, num = gla_step(state["C"], q, k, vi, log_a)
+        new_n, den = gla_step(state["n"], q, k, ones, log_a)
+        new_state = {"C": new_C, "n": new_n, "conv": new_conv}
+    else:
+        num, C_fin = chunked_gla(q, k, vi, log_a, chunk=min(chunk, S), plan=plan)
+        den, n_fin = chunked_gla(q, k, ones, log_a, chunk=min(chunk, S), plan=plan)
+        new_state = None
+        if state == "init":
+            new_state = {"C": C_fin, "n": n_fin, "conv": new_conv}
+
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(B, S, d_inner).astype(x.dtype) * gate
+    wo = plan.gather_fsdp(p["wo"], ("tp", "fsdp"))
+    out = jnp.einsum("bse,ed->bsd", h, wo,
+                     preferred_element_type=jnp.bfloat16)
+    out = plan.constrain(out, "batch", "sp", None)
+    return x + out, new_state
+
+
+def mlstm_state_defs(cfg, B: int, layers: int):
+    d_inner, H, P = mlstm_dims(cfg)
+    return {
+        "C": ((layers, B, H, P, P), jnp.float32,
+              ("layers", "batch", "tp", None, None)),
+        "n": ((layers, B, H, P, 1), jnp.float32,
+              ("layers", "batch", "tp", None, None)),
+        "conv": ((layers, B, cfg.ssm_conv - 1, d_inner), jnp.bfloat16,
+                 ("layers", "batch", None, "tp")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_defs(cfg, layers: Optional[int] = None):
+    d = cfg.d_model
+    lead = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "norm": {"w": ParamDef(lead + (d,), la + (None,), init="zeros")},
+        "wz": ParamDef(lead + (d, d), la + ("fsdp", "tp")),
+        "wi": ParamDef(lead + (d, d), la + ("fsdp", "tp")),
+        "wf": ParamDef(lead + (d, d), la + ("fsdp", "tp")),
+        "wo_gate": ParamDef(lead + (d, d), la + ("fsdp", "tp")),
+        "wo": ParamDef(lead + (d, d), la + ("tp", "fsdp")),
+    }
+
+
+def slstm_block(x, p, cfg, plan, *, state=None):
+    B, S, d = x.shape
+    decode = isinstance(state, dict)
+    xn = rms_norm(x, p["norm"]["w"])
+    z = jnp.tanh(jnp.einsum("bsd,de->bse", xn, p["wz"]).astype(jnp.float32))
+    i = jnp.exp(jnp.clip(jnp.einsum("bsd,de->bse", xn, p["wi"])
+                         .astype(jnp.float32), -20.0, 2.0))
+    f = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xn, p["wf"])
+                       .astype(jnp.float32))
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xn, p["wo_gate"])
+                       .astype(jnp.float32))
+
+    if decode:
+        c = f[:, 0] * state["c"] + i[:, 0] * z[:, 0]
+        n = f[:, 0] * state["n"] + i[:, 0]
+        h = (o[:, 0] * c / jnp.maximum(n, 1e-6))[:, None]
+        new_state = {"c": c, "n": n}
+    else:
+        def combine(a, b):
+            (f1, c1), (f2, c2) = a, b
+            return f1 * f2, f2 * c1 + c2
+        _, c = jax.lax.associative_scan(combine, (f, i * z), axis=1)
+        _, n = jax.lax.associative_scan(combine, (f, i), axis=1)
+        h = o * c / jnp.maximum(n, 1e-6)
+        new_state = {"c": c[:, -1], "n": n[:, -1]} if state == "init" else None
+
+    out = jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["wo"],
+                     preferred_element_type=jnp.bfloat16)
+    out = plan.constrain(out, "batch", "sp", None)
+    return x + out, new_state
+
+
+def slstm_state_defs(cfg, B: int, layers: int):
+    d = cfg.d_model
+    return {
+        "c": ((layers, B, d), jnp.float32, ("layers", "batch", "tp")),
+        "n": ((layers, B, d), jnp.float32, ("layers", "batch", "tp")),
+    }

@@ -1,0 +1,151 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment,
+bf16-friendly — used for the >=100B configs so optimizer state fits 16 GB/chip;
+see DESIGN.md §5).
+
+Self-contained (no optax dependency), pytree-structured, shard-friendly:
+every state leaf inherits its parameter's sharding (factored Adafactor stats
+drop the corresponding dim's axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params, lr) -> (params, state)
+    state_axes: Callable      # param_defs -> state logical-axes tree
+
+
+# ---------------------------------------------------------------------------
+def AdamW(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        b1c = 1 - b1 ** c.astype(jnp.float32)
+        b2c = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            if p.ndim >= 2:   # decoupled weight decay on matrices only
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": c}
+
+    def state_axes(param_defs):
+        from ..models.params import ParamDef, is_def
+        ax = lambda d: jax.tree.map(
+            lambda dd: tuple(dd.axes), param_defs, is_leaf=is_def)
+        return {"m": ax(param_defs), "v": ax(param_defs), "count": ()}
+
+    return Optimizer(init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+def Adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8,
+              weight_decay=0.0, min_dim_factored=128) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern, 2018).  Matrices
+    with both trailing dims >= min_dim_factored get row/col factored stats;
+    everything else falls back to a full fp32 second moment."""
+
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored \
+            and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def st(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree.map(st, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, -1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, -2)
+                # V ~= (vr / mean(vr)) outer vc  (Shazeer & Stern eq. 4)
+                vr_n = vr / jnp.maximum(jnp.mean(vr, -1, keepdims=True), eps)
+                step = g * jax.lax.rsqrt(vr_n + eps)[..., None] \
+                         * jax.lax.rsqrt(vc + eps)[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                step = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, {"s": new_s, "count": c}
+
+    def state_axes(param_defs):
+        from ..models.params import is_def
+        def st(d):
+            shape, axes = d.shape, tuple(d.axes)
+            if len(shape) >= 2 and shape[-1] >= min_dim_factored \
+                    and shape[-2] >= min_dim_factored:
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+        return {"s": jax.tree.map(st, param_defs, is_leaf=is_def),
+                "count": ()}
+
+    return Optimizer(init, update, state_axes)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,3 @@
+from .engine import InferenceEngine, Request
+
+__all__ = ["InferenceEngine", "Request"]

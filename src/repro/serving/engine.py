@@ -1,0 +1,201 @@
+"""Serving engine — FastFlow accelerator mode (paper Sec. 9) around a
+continuous-batching decode loop.
+
+Skeleton structure:
+  emitter    = the SLOT SCHEDULER: a custom load balancer whose
+               ``selectworker`` picks a free decode slot for each incoming
+               request (paper Sec. 8.3 — user-defined scheduling policy);
+  workers    = the batched SPMD decode step (all slots advance together —
+               the device farm);
+  collector  = per-request output queues (load_result / load_result_nb);
+  feedback   = generated tokens re-entering the decode step (wrap_around).
+
+The host API is the paper's accelerator API verbatim: ``run_then_freeze()``
+starts the engine, ``offload(request)`` submits, ``load_result()`` blocks
+for the next finished request, ``offload(FF_EOS)`` + ``wait()`` shut down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.node import EOS
+from ..core.queues import SPSCQueue
+from ..models.lm import LM
+from ..runtime.steps import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    id: int = -1
+    # filled by the engine:
+    tokens: Optional[List[int]] = None
+    done: bool = False
+    submit_t: float = 0.0
+    finish_t: float = 0.0
+
+
+class SlotScheduler:
+    """The emitter's load-balancer: free-slot tracking (selectworker)."""
+
+    def __init__(self, n_slots: int):
+        self.free = list(range(n_slots))
+        self.active: Dict[int, Request] = {}
+
+    def selectworker(self) -> Optional[int]:
+        return self.free.pop() if self.free else None
+
+    def release(self, slot: int) -> None:
+        self.active.pop(slot, None)
+        self.free.append(slot)
+
+
+class InferenceEngine:
+    def __init__(self, cfg, plan, params, *, max_batch: int = 4,
+                 cache_len: int = 256, eos_token: Optional[int] = None):
+        self.cfg = cfg
+        self.plan = plan
+        self.params = params
+        self.B = max_batch
+        self.cache_len = cache_len
+        self.eos_token = eos_token
+        self.model = LM(cfg)
+
+        self._prefill = jax.jit(make_prefill_step(cfg, plan, cache_len))
+        self._decode = jax.jit(make_decode_step(cfg, plan, cache_len))
+        self._insert = jax.jit(self._insert_impl)
+
+        # batched state: caches for B slots + per-slot bookkeeping
+        self.caches = jax.tree.map(
+            lambda t: jnp.zeros(t.shape, t.dtype),
+            self._cache_template())
+        self.cur_tok = jnp.zeros((self.B, 1), jnp.int32)
+        self.pos = jnp.zeros((self.B,), jnp.int32)
+        self.active_mask = np.zeros((self.B,), bool)
+
+        self.sched = SlotScheduler(self.B)
+        self._in: SPSCQueue = SPSCQueue(256)
+        self._out: SPSCQueue = SPSCQueue(1024)
+        self._thread: Optional[threading.Thread] = None
+        self.error: Optional[BaseException] = None
+        self.steps = 0
+
+    # -- caches -----------------------------------------------------------------
+    def _cache_template(self):
+        from ..configs.base import cache_specs
+        return cache_specs(self.cfg, self.B, self.cache_len, None)
+
+    def _insert_impl(self, caches, new_cache, cur_tok, pos, slot, tok, p):
+        """Write a single prefilled (B=1) cache into slot ``slot``."""
+        def put(c, n):
+            # c: (L, B, ...) or nested; n: (L, 1, ...)
+            return jax.lax.dynamic_update_slice(
+                c, n.astype(c.dtype), (0, slot) + (0,) * (c.ndim - 2))
+        caches = jax.tree.map(put, caches, new_cache)
+        cur_tok = jax.lax.dynamic_update_slice(cur_tok, tok, (slot, 0))
+        pos = pos.at[slot].set(p)
+        return caches, cur_tok, pos
+
+    # -- paper accelerator API -----------------------------------------------------
+    def run_then_freeze(self) -> int:
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="inference-engine")
+        self._thread.start()
+        return 0
+
+    def offload(self, req) -> None:
+        self._in.push(req)
+
+    def load_result(self, timeout: Optional[float] = None):
+        item = self._out.pop(timeout)
+        if item is EOS:
+            return False, None
+        return True, item
+
+    def load_result_nb(self):
+        ok, item = self._out.try_pop()
+        if not ok or item is EOS:
+            return False, None
+        return True, item
+
+    def wait(self, timeout: Optional[float] = None) -> int:
+        if self._thread is not None:
+            self._thread.join(timeout)
+        return -1 if self.error is not None else 0
+
+    # -- engine loop -------------------------------------------------------------
+    def _admit(self) -> bool:
+        admitted = False
+        while self.sched.free:
+            ok, req = self._in.try_pop()
+            if not ok:
+                break
+            if req is EOS:
+                self._draining = True
+                break
+            slot = self.sched.selectworker()
+            req.tokens = []
+            req.submit_t = time.perf_counter()
+            self.sched.active[slot] = req
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache1 = self._prefill(self.params, {"tokens": prompt})
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            self.caches, self.cur_tok, self.pos = self._insert(
+                self.caches, cache1, self.cur_tok, self.pos,
+                jnp.asarray(slot), tok, jnp.asarray(prompt.shape[1],
+                                                    jnp.int32))
+            req.tokens.append(int(tok[0, 0]))
+            self.active_mask[slot] = True
+            admitted = True
+        return admitted
+
+    def _loop(self) -> None:
+        self._draining = False
+        try:
+            while True:
+                self._admit()
+                if not self.active_mask.any():
+                    if self._draining and self._in.empty():
+                        break
+                    ok, _peek = (not self._in.empty()), None
+                    if not ok:
+                        time.sleep(1e-4)
+                    continue
+                nt, logits, self.caches = self._decode(
+                    self.params, self.caches,
+                    {"token": self.cur_tok, "pos": self.pos})
+                self.cur_tok = nt
+                self.pos = self.pos + jnp.asarray(
+                    self.active_mask, jnp.int32)  # only active slots advance
+                self.steps += 1
+                toks = np.asarray(nt[:, 0])
+                for slot in list(self.sched.active):
+                    req = self.sched.active[slot]
+                    if not self.active_mask[slot]:
+                        continue
+                    t = int(toks[slot])
+                    req.tokens.append(t)
+                    finished = (len(req.tokens) >= req.max_new_tokens or
+                                (self.eos_token is not None
+                                 and t == self.eos_token))
+                    if finished:
+                        req.done = True
+                        req.finish_t = time.perf_counter()
+                        self.active_mask[slot] = False
+                        self.sched.release(slot)
+                        self._out.push(req)
+        except BaseException as e:   # noqa: BLE001
+            self.error = e
+            import traceback
+            traceback.print_exc()
+        finally:
+            self._out.push(EOS)

@@ -1,0 +1,25 @@
+# Tests run on the single real CPU device (the dry-run's 512 fake devices
+# are set ONLY inside launch/dryrun.py / subprocess tests, never here).
+import os
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import warnings
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def plan():
+    from repro.core.plan import single_device_plan
+    return single_device_plan()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

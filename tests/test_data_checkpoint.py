@@ -1,0 +1,118 @@
+"""Data pipeline determinism/resume + checkpoint atomicity/async/reshard."""
+
+import pathlib
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              load_checkpoint, save_checkpoint)
+from repro.data import DataPipeline, MemmapTokenSource, SyntheticLMSource
+from repro.data.sources import write_token_file
+
+
+def test_synthetic_source_deterministic_and_resumable():
+    s1 = SyntheticLMSource(100, 16, 4, seed=7)
+    batches = [s1.next_batch()["tokens"] for _ in range(5)]
+    st = s1.state()
+    more = [s1.next_batch()["tokens"] for _ in range(3)]
+    s2 = SyntheticLMSource(100, 16, 4, seed=7)
+    s2.restore(st)
+    resumed = [s2.next_batch()["tokens"] for _ in range(3)]
+    for a, b in zip(more, resumed):
+        assert np.array_equal(a, b)
+    # and a fresh source replays identically from the start
+    s3 = SyntheticLMSource(100, 16, 4, seed=7)
+    assert np.array_equal(s3.next_batch()["tokens"], batches[0])
+
+
+def test_memmap_source_sharded(tmp_path):
+    toks = np.arange(16 * 64, dtype=np.int32)
+    f = tmp_path / "tokens.bin"
+    write_token_file(f, toks)
+    a = MemmapTokenSource(f, seq_len=16, batch_size=2, shard_id=0,
+                          num_shards=2)
+    b = MemmapTokenSource(f, seq_len=16, batch_size=2, shard_id=1,
+                          num_shards=2)
+    ba, bb = a.next_batch()["tokens"], b.next_batch()["tokens"]
+    # disjoint windows across shards
+    assert set(ba[:, 0].tolist()).isdisjoint(bb[:, 0].tolist())
+    # resumable
+    st = a.state()
+    nxt = a.next_batch()["tokens"]
+    a2 = MemmapTokenSource(f, seq_len=16, batch_size=2)
+    a2.restore(st)
+    assert np.array_equal(a2.next_batch()["tokens"], nxt)
+
+
+def test_pipeline_prefetch_and_backpressure():
+    src = SyntheticLMSource(50, 8, 2, seed=1)
+    pipe = DataPipeline(src, shardings=None, n_batches=6, prefetch=2).start()
+    got = []
+    while True:
+        b = pipe.get(timeout=10)
+        if b is None:
+            break
+        got.append(np.asarray(b["tokens"]))
+    assert len(got) == 6
+    ref = SyntheticLMSource(50, 8, 2, seed=1)
+    for g in got:
+        assert np.array_equal(g, ref.next_batch()["tokens"])
+
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    state = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+             "step": jnp.asarray(5)}
+    save_checkpoint(tmp_path, 5, state, extras={"data": {"index": 9}})
+    assert latest_step(tmp_path) == 5
+    # no tmp dirs left behind
+    assert not list(tmp_path.glob("*.tmp"))
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    restored, extras = load_checkpoint(tmp_path, like)
+    assert extras["data"]["index"] == 9
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert int(restored["step"]) == 5
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    state = {"w": jnp.zeros((2,))}
+    for s in [1, 2, 3, 4, 5]:
+        save_checkpoint(tmp_path, s, state, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_00000004", "step_00000005"]
+
+
+def test_async_checkpoint_snapshot_isolation(tmp_path):
+    """save_async must snapshot values at call time, even if the live state
+    is mutated right after (donation semantics)."""
+    mgr = CheckpointManager(tmp_path)
+    state = {"w": jnp.ones((4,))}
+    mgr.save_async(1, state)
+    state = {"w": jnp.zeros((4,))}          # mutate after enqueue
+    mgr.wait()
+    restored, _ = mgr.restore({"w": jnp.zeros((4,))})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.ones(4))
+
+
+def test_elastic_reshard_roundtrip(tmp_path, plan, rng):
+    """Save on one 'mesh', restore through reshard onto another (both are
+    1-device here; the path exercises device_put with plan shardings)."""
+    from repro.configs import get
+    from repro.checkpoint.reshard import reshard_state
+    from repro.runtime.steps import init_state
+    cfg = get("ff-tiny").reduced()
+    state = init_state(cfg, plan, rng)
+    save_checkpoint(tmp_path, 0, state)
+    like = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), state)
+    host, _ = load_checkpoint(tmp_path, like)
+    placed = reshard_state(cfg, host, plan)
+    for a, b in zip(jax.tree.leaves(placed), jax.tree.leaves(state)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(placed)[0], np.float32),
+        np.asarray(jax.tree.leaves(state)[0], np.float32))

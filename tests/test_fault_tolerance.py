@@ -1,0 +1,81 @@
+"""Fault tolerance: checkpoint/restart on failure, straggler watchdog,
+training continues to completion with correct data-stream resume."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.data import SyntheticLMSource, make_pipeline
+from repro.optim.schedules import linear_warmup
+from repro.runtime.driver import DriverConfig, TrainDriver
+from repro.runtime.monitor import StragglerWatchdog
+from repro.runtime.steps import init_state, make_train_step
+
+
+def _driver(plan, rng, tmp_path, total=12, fail_at=None, fail_times=1):
+    cfg = get("ff-tiny").reduced()
+    state = init_state(cfg, plan, rng)
+    src = SyntheticLMSource(cfg.vocab, 16, 2, seed=3)
+    pipe = make_pipeline(src, plan, n_batches=total * 3)
+    step = jax.jit(make_train_step(cfg, plan, linear_warmup(1e-3, 5)))
+    fired = [0]
+
+    def hook(s):
+        if fail_at is not None and s == fail_at and fired[0] < fail_times:
+            fired[0] += 1
+            raise RuntimeError("injected preemption")
+
+    return TrainDriver(step, state, pipe,
+                       DriverConfig(total_steps=total, ckpt_every=4,
+                                    ckpt_dir=str(tmp_path), max_retries=3,
+                                    retry_backoff_s=0.01, log_every=1000),
+                       fault_hook=hook)
+
+
+def test_training_completes_without_failures(plan, rng, tmp_path):
+    d = _driver(plan, rng, tmp_path, total=8)
+    out = d.run()
+    assert out["final_step"] == 8
+    assert out["restarts"] == 0
+    assert d.ckpt.latest() == 8
+
+
+def test_restart_after_injected_failure(plan, rng, tmp_path):
+    d = _driver(plan, rng, tmp_path, total=12, fail_at=6)
+    out = d.run()
+    assert out["final_step"] == 12
+    assert out["restarts"] == 1                      # restored from step 4
+    kinds = [e["kind"] for e in d.monitor.events]
+    assert "step_failure" in kinds and "restart" in kinds
+    # loss history covers re-executed steps (5,6 re-run after restore)
+    steps = [h["step"] for h in out["history"]]
+    assert steps.count(5) >= 1
+
+
+def test_repeated_failure_exhausts_retries(plan, rng, tmp_path):
+    d = _driver(plan, rng, tmp_path, total=12, fail_at=2, fail_times=99)
+    with pytest.raises(RuntimeError, match="injected"):
+        d.run()
+
+
+def test_failure_before_first_checkpoint_retries_in_place(plan, rng,
+                                                          tmp_path):
+    d = _driver(plan, rng, tmp_path, total=6, fail_at=1, fail_times=2)
+    out = d.run()
+    assert out["final_step"] == 6
+
+
+def test_straggler_watchdog_flags_outliers():
+    wd = StragglerWatchdog(k=3.0, warmup=3)
+    flagged = []
+    for i in range(50):
+        dt = 0.01 if i != 30 else 0.2
+        flagged.append(wd.observe(dt))
+    assert flagged[30] is True
+    assert sum(flagged) == 1
+    assert wd.count == 1
+    # the outlier did not poison the EMA
+    assert wd.mean < 0.02

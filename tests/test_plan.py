@@ -1,0 +1,88 @@
+"""ShardingPlan invariants (hypothesis): fitted specs always divide, fsdp
+toggle drops cleanly, logical-axis resolution is mesh-aware."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.plan import ShardingPlan
+
+
+def _mesh_1dev(names=("data", "model")):
+    devs = np.array(jax.devices()[:1]).reshape((1,) * len(names))
+    return Mesh(devs, axis_names=names)
+
+
+def _plan():
+    return ShardingPlan(mesh=_mesh_1dev())
+
+
+def test_logical_resolution_drops_absent_axes():
+    plan = _plan()
+    assert plan.axes("batch") == "data"       # 'pod' absent -> dropped
+    assert plan.axes("tp") == "model"
+    assert plan.axes(None) is None
+    assert plan.axes("layers") is None
+
+
+def test_sp_toggle():
+    plan = _plan()
+    assert plan.axes("sp") == "model"
+    plan.sequence_parallel = False
+    assert plan.axes("sp") is None
+
+
+def test_fsdp_toggle():
+    plan = _plan()
+    spec = plan.param_spec(("fsdp", "tp"))
+    assert spec == P("data", "model")
+    plan.fsdp_params = False
+    assert plan.param_spec(("fsdp", "tp")) == P(None, "model")
+
+
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4))
+@settings(max_examples=60, deadline=None)
+def test_fitted_specs_always_divide(dims):
+    """Property: every mesh axis kept in a fitted spec divides its dim."""
+    plan = _plan()
+    logicals = ["batch", "tp", "fsdp", None][:len(dims)]
+    spec = plan.spec_for_shape(dims, logicals)
+    for d, s in zip(dims, spec):
+        if s is None:
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        n = 1
+        for a in axes:
+            n *= plan.mesh.shape[a]
+        assert d % n == 0
+
+
+def test_fit_drops_non_dividing_on_multi_axis_mesh():
+    """On a fake 4x2 mesh built from repeated single device entries we can't
+    test placement, but the pure spec logic is mesh-shape driven; emulate
+    via a plan whose mesh reports bigger sizes."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+        devices = np.empty((4, 2), object)
+    plan = ShardingPlan.__new__(ShardingPlan)
+    plan.mesh = FakeMesh()
+    plan.rules = dict(__import__("repro.core.plan", fromlist=["DEFAULT_RULES"])
+                      .DEFAULT_RULES)
+    plan.sequence_parallel = True
+    plan.fsdp_params = True
+    plan.constrain_activations = True
+    plan._axis_names = {"data", "model"}
+    # batch=6: 'data'(4) does not divide -> dropped entirely
+    assert plan._fit_dim(6, "batch") is None
+    # batch=8: divides 4 -> kept
+    assert plan._fit_dim(8, "batch") == "data"
+    # dim=2 with tp(2) -> kept; dim=3 -> dropped
+    assert plan._fit_dim(2, "tp") == "model"
+    assert plan._fit_dim(3, "tp") is None
+
+
+def test_axis_sizes(plan):
+    assert plan.dp == 1 and plan.tp == 1

@@ -1,0 +1,97 @@
+"""L1/L2 channel tests incl. hypothesis FIFO/linearizability properties."""
+
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.queues import MPMCQueue, MPSCQueue, SPMCQueue, SPSCQueue
+
+
+def test_spsc_basic():
+    q = SPSCQueue(8)
+    assert q.empty()
+    for i in range(7):
+        assert q.try_push(i)
+    assert not q.try_push(99)          # full at capacity-1
+    got = [q.try_pop()[1] for _ in range(7)]
+    assert got == list(range(7))
+    assert q.try_pop() == (False, None)
+
+
+@given(st.lists(st.one_of(st.just("push"), st.just("pop")), max_size=200),
+       st.integers(min_value=2, max_value=16))
+@settings(max_examples=50, deadline=None)
+def test_spsc_fifo_property(ops, cap):
+    """FIFO + no loss + no duplication under arbitrary interleaving."""
+    q = SPSCQueue(cap)
+    pushed, popped = [], []
+    n = 0
+    for op in ops:
+        if op == "push":
+            if q.try_push(n):
+                pushed.append(n)
+            n += 1
+        else:
+            ok, item = q.try_pop()
+            if ok:
+                popped.append(item)
+    while True:
+        ok, item = q.try_pop()
+        if not ok:
+            break
+        popped.append(item)
+    assert popped == pushed
+
+
+def test_spsc_threaded_stream():
+    q = SPSCQueue(16)
+    N = 5000
+    out = []
+
+    def producer():
+        for i in range(N):
+            q.push(i)
+
+    def consumer():
+        for _ in range(N):
+            out.append(q.pop())
+
+    tp, tc = threading.Thread(target=producer), threading.Thread(target=consumer)
+    tp.start(); tc.start(); tp.join(); tc.join()
+    assert out == list(range(N))
+
+
+def test_spmc_round_robin():
+    q = SPMCQueue(3, 16)
+    for i in range(9):
+        q.push_rr(i)
+    lanes = [[q.lanes[j].pop() for _ in range(3)] for j in range(3)]
+    assert lanes[0] == [0, 3, 6]
+    assert lanes[1] == [1, 4, 7]
+    assert lanes[2] == [2, 5, 8]
+
+
+def test_spmc_ondemand_prefers_short_lanes():
+    q = SPMCQueue(2, 16)
+    q.lanes[0].push("busy1")
+    q.lanes[0].push("busy2")
+    idx = q.push_ondemand("task", threshold=1)
+    assert idx == 1
+
+
+def test_mpsc_fair_drain():
+    q = MPSCQueue(2, 8)
+    q.lane(0).push("a0")
+    q.lane(1).push("b0")
+    q.lane(0).push("a1")
+    got = [q.pop_any()[0] for _ in range(3)]
+    assert set(got) == {"a0", "b0", "a1"}
+
+
+def test_mpmc_routing():
+    q = MPMCQueue(2, 2, 8)
+    q.push(0, 1, "x")
+    q.push(1, 1, "y")
+    items = {q.pop(1)[0] for _ in range(2)}
+    assert items == {"x", "y"}

@@ -1,0 +1,210 @@
+"""L3 skeleton semantics — the paper's own examples as tests (hello
+pipeline, sieve, farms, broadcast/MISD, on-demand, accelerator, feedback
+divide&conquer, nesting) + the Sec. 13 performance model."""
+
+import pytest
+
+from repro.core import (BroadcastLB, Farm, FF_EOS, FFMap, FFNode, FnNode,
+                        GO_ON, OnDemandLB, Pipeline)
+from repro.core import perf_model as pm
+
+
+class Counter(FFNode):
+    def __init__(self, n):
+        super().__init__()
+        self.i, self.n = 0, n
+
+    def svc(self, _):
+        self.i += 1
+        return self.i if self.i <= self.n else None
+
+
+class Collect(FFNode):
+    def __init__(self):
+        super().__init__()
+        self.got = []
+
+    def svc(self, t):
+        self.got.append(t)
+        return GO_ON
+
+
+def test_two_stage_pipeline_order():
+    sink = Collect()
+    p = Pipeline(Counter(5), sink)
+    assert p.run_and_wait_end() == 0
+    assert sink.got == [1, 2, 3, 4, 5]          # SPSC preserves order
+
+
+def test_sieve_pipeline_finds_primes():
+    class Sieve(FFNode):
+        def __init__(self):
+            super().__init__()
+            self.f = 0
+
+        def svc(self, t):
+            if self.f == 0:
+                self.f = t
+                return GO_ON
+            return GO_ON if t % self.f == 0 else t
+
+    class Gen(FFNode):
+        def __init__(self, n):
+            super().__init__()
+            self.i, self.n = 1, n
+
+        def svc(self, _):
+            self.i += 1
+            return self.i if self.i <= self.n else None
+
+    stages = [Sieve() for _ in range(7)]
+    sink = Collect()
+    p = Pipeline(Gen(30), *stages, sink)
+    assert p.run_and_wait_end() == 0
+    assert sorted(s.f for s in stages) == [2, 3, 5, 7, 11, 13, 17]
+    assert sink.got == [19, 23, 29]             # survivors past 7 stages
+
+
+def test_farm_emitter_collector():
+    col = Collect()
+    f = Farm([FnNode(lambda t: t * 2) for _ in range(4)])
+    f.add_emitter(Counter(10)).add_collector(col)
+    assert f.run_and_wait_end() == 0
+    assert sorted(col.got) == [2 * i for i in range(1, 11)]
+
+
+def test_farm_no_collector_consolidates_in_memory():
+    results = {}
+
+    class W(FFNode):
+        def svc(self, t):
+            results[t[0]] = t[1] + 1
+            return GO_ON
+
+    class Em(FFNode):
+        def __init__(self):
+            super().__init__()
+            self.i = 0
+
+        def svc(self, _):
+            self.i += 1
+            return (self.i, self.i * self.i) if self.i <= 10 else None
+
+    f = Farm([W(), W()]).add_emitter(Em())
+    assert f.run_and_wait_end() == 0
+    assert results == {i: i * i + 1 for i in range(1, 11)}
+
+
+def test_broadcast_misd_farm():
+    ws = [Collect(), Collect()]
+    f = Farm(ws, lb=BroadcastLB()).add_emitter(Counter(4))
+    assert f.run_and_wait_end() == 0
+    assert ws[0].got == ws[1].got == [1, 2, 3, 4]
+
+
+def test_ondemand_scheduling():
+    import time
+
+    class SlowW(Collect):
+        def svc(self, t):
+            time.sleep(0.02)
+            return super().svc(t)
+
+    fast, slow = Collect(), SlowW()
+    f = Farm([slow, fast]).add_emitter(Counter(20))
+    f.set_scheduling_ondemand(threshold=0)      # only feed idle lanes
+    assert f.run_and_wait_end() == 0
+    assert len(fast.got) > len(slow.got)        # work follows availability
+    assert sorted(fast.got + slow.got) == list(range(1, 21))
+
+
+def test_accelerator_offload_load_result():
+    f = Farm([FnNode(lambda t: t + 1) for _ in range(2)])
+    f.add_collector(FnNode(lambda t: t))         # pass-through to out stream
+    f.run_then_freeze()
+    for i in range(8):
+        f.offload(i)
+    f.offload(FF_EOS)
+    got = []
+    while True:
+        ok, r = f.load_result()
+        if not ok:
+            break
+        got.append(r)
+    assert f.wait() == 0
+    assert sorted(got) == list(range(1, 9))
+
+
+def test_feedback_divide_and_conquer():
+    class Em(FFNode):
+        def __init__(self, seeds):
+            super().__init__()
+            self.prime = True
+            self.pending = list(seeds)
+            self.inflight = 0
+            self.done = []
+
+        def svc(self, t):
+            if t is not None:
+                self.inflight -= 1
+                if t % 2 == 0:
+                    self.pending.append(t)      # split: halve again
+                else:
+                    self.done.append(t)         # conquer: base case
+            while self.pending:
+                self.inflight += 1
+                self.ff_send_out(self.pending.pop())
+            return None if self.inflight == 0 else GO_ON
+
+    em = Em([40, 12, 7])
+    f = Farm([FnNode(lambda t: t // 2 if t % 2 == 0 else t),
+              FnNode(lambda t: t // 2 if t % 2 == 0 else t)])
+    f.add_emitter(em)
+    f.wrap_around()
+    assert f.run_and_wait_end() == 0
+    assert sorted(em.done) == [3, 5, 7]
+
+
+def test_nesting_farm_of_pipelines():
+    col = Collect()
+    workers = [Pipeline(FnNode(lambda t: t + 1), FnNode(lambda t: t * 10))
+               for _ in range(2)]
+    f = Farm(workers).add_emitter(Counter(6)).add_collector(col)
+    assert f.run_and_wait_end() == 0
+    assert sorted(col.got) == [(i + 1) * 10 for i in range(1, 7)]
+
+
+def test_pipeline_of_farms():
+    col = Collect()
+    inner = Farm([FnNode(lambda t: t + 100), FnNode(lambda t: t + 100)])
+    p = Pipeline(Counter(5), inner, col)
+    assert p.run_and_wait_end() == 0
+    assert sorted(col.got) == [101, 102, 103, 104, 105]
+
+
+# --- paper Sec. 13 performance model -----------------------------------------
+def test_pipeline_service_time_is_max_stage():
+    assert pm.pipeline_service_time([1.0, 3.0, 2.0]) == 3.0
+    # balanced k-stage pipeline speedup ~ k
+    k = 5
+    sp = pm.pipeline_speedup([1.0] * k, m_tasks=10**6)
+    assert abs(sp - k) < 0.01
+
+
+def test_farm_speedup_near_linear_then_bounded():
+    sp = pm.farm_speedup(10**6, t_task=1.0, nw=8)
+    assert abs(sp - 8) < 0.01
+    # emitter-bound farm saturates at t_task/t_emit
+    sp = pm.farm_speedup(10**6, t_task=1.0, nw=64, t_emit=0.25)
+    assert abs(sp - 4.0) < 0.01
+
+
+def test_bubble_fraction_and_microbatch_choice():
+    assert pm.pipeline_bubble_fraction(4, 1) == pytest.approx(3 / 4)
+    m = pm.choose_microbatches(16, max_bubble=0.1)
+    assert pm.pipeline_bubble_fraction(16, m) <= 0.1
+
+
+def test_amdahl():
+    assert pm.amdahl(0.0, 16) == pytest.approx(16.0)
+    assert pm.amdahl(1.0, 16) == pytest.approx(1.0)

@@ -1,0 +1,34 @@
+"""Inject the generated roofline table + perf log into EXPERIMENTS.md.
+
+    PYTHONPATH=src python tools/update_experiments.py
+"""
+
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.roofline import load, table  # noqa: E402
+
+
+def main():
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+    rows = load("sp")
+    md = table(rows, "md")
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    n_skip = sum(1 for r in rows if r.get("skipped"))
+    header = (f"\n*{n_ok} compiled cells + {n_skip} documented skips "
+              f"(single-pod 16x16; per-chip peak vs 16 GiB HBM).*\n\n")
+    exp = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## |\Z)",
+                 "<!-- ROOFLINE_TABLE -->" + header + md + "\n\n",
+                 exp, flags=re.S)
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print(f"injected roofline table ({n_ok} ok, {n_skip} skip)")
+
+
+if __name__ == "__main__":
+    main()
