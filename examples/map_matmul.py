@@ -3,9 +3,12 @@ matrix multiply as Split -> workers -> Compose, at BOTH levels this
 framework provides:
 
 1. host level: the literal ff_map structure (Split emitter partitions
-   C = A x B into row tasks, workers compute rows, Compose rebuilds C);
+   C = A x B into row tasks, workers compute rows, Compose rebuilds C),
+   built with the graph API's ``ffmap`` block and host-lowered;
 2. device level: the same skeleton lowered to shard_map over the mesh
-   (core.device.tensor_map) — Split = PartitionSpec, Compose = psum.
+   (core.device.tensor_map) — Split = PartitionSpec, Compose = psum —
+   plus the SAME ``farm`` graph lowered host-side and device-side through
+   the one ``lower(plan)`` entry point, producing identical rows.
 
     PYTHONPATH=src python examples/map_matmul.py
 """
@@ -18,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FFMap, FFNode, GO_ON
+from repro.core import FFNode, GO_ON, farm, ffmap
 from repro.core.device import tensor_map
 from repro.core.plan import single_device_plan
 from jax.sharding import PartitionSpec as P
@@ -55,8 +58,8 @@ class Compose(FFNode):
 
 def host_map_matmul(A, B, nworkers=4):
     C = np.zeros((A.shape[0], B.shape[1]), A.dtype)
-    m = FFMap(Split(), [Worker() for _ in range(nworkers)],
-              Compose(A.shape[0]))
+    m = ffmap(Split(), [Worker() for _ in range(nworkers)],
+              Compose(A.shape[0])).lower()
     m.run_then_freeze()
     m.offload((A, B, C))
     from repro.core import FF_EOS
@@ -84,6 +87,16 @@ def main():
                                atol=1e-5)
     print("device-level tensor_map matmul: OK (Split=PartitionSpec, "
           "Compose=psum)")
+
+    # --- one graph, two lowerings -------------------------------------------
+    Bj = jnp.asarray(B)
+    g = farm(lambda row: row @ Bj, n=2)
+    rows_host = g.lower().run(list(jnp.asarray(A)))
+    rows_dev = g.lower(plan).run(list(A))
+    np.testing.assert_allclose(np.sort(np.asarray(rows_host), axis=0),
+                               np.sort(np.asarray(rows_dev), axis=0),
+                               rtol=1e-5)
+    print("graph farm lower() parity: host threads == mesh shard_map")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """The paper's Sieve of Eratosthenes (FastFlow tutorial Secs. 6-7),
-running on this framework's host skeleton runtime — same structure, same
-semantics: a Generate source, N Sieve stages, a Printer sink, composed in a
-pipeline; svc_init/svc_end lifecycle hooks included.
+written against the building-blocks graph API — same structure, same
+semantics: a Generate source, N Sieve stages, a Printer sink, composed with
+``pipeline(...)``, normalised by ``optimize()``, and executed through the
+single ``lower()`` entry point; svc_init/svc_end lifecycle hooks included.
 
     PYTHONPATH=src python examples/sieve_pipeline.py 7 50
 """
@@ -10,7 +11,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import FFNode, GO_ON, Pipeline
+from repro.core import FFNode, GO_ON, pipeline
 
 
 class Generate(FFNode):
@@ -64,11 +65,12 @@ class Printer(FFNode):
 def main():
     nstages = int(sys.argv[1]) if len(sys.argv) > 1 else 7
     streamlen = int(sys.argv[2]) if len(sys.argv) > 2 else 50
-    pipe = Pipeline(Generate(streamlen),
-                    *[Sieve() for _ in range(nstages)], Printer())
-    if pipe.run_and_wait_end() < 0:
+    graph = pipeline(Generate(streamlen),
+                     *[Sieve() for _ in range(nstages)], Printer())
+    runner = graph.optimize().lower()
+    if runner.run_and_wait_end() < 0:
         raise SystemExit("running pipeline failed")
-    print(f"DONE, pipe time = {pipe.ffTime():.3f} (ms)")
+    print(f"DONE, pipe time = {runner.ffTime():.3f} (ms)")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,42 @@
-# The paper's primary contribution — the FastFlow structured-parallel
-# skeleton framework, adapted from shared-memory multicores to TPU pods.
-#
-# Host layer (paper-faithful API): queues, ff_node, Pipeline/Farm/FFMap,
-# load balancers, feedback, accelerator mode.
-# Device layer: skeleton lowering onto a JAX mesh (core.device), the
-# logical-axis sharding plan (core.plan), and the Sec. 13 performance
-# model extended with a TPU roofline (core.perf_model).
+"""Core of the framework — FastFlow's layered streaming-network model,
+adapted from shared-memory multicores to TPU pods, unified behind one
+composable *building blocks* graph API.
+
+Layer 1-2 (``core.queues``): lock-free SPSC ring buffers, composed into
+SPMC / MPSC / MPMC networks — the channels every host skeleton runs over.
+
+Layer 3 (``core.node``, ``core.skeletons``): the paper-faithful host
+runtime — ``ff_node`` (``svc``/``svc_init``/``svc_end``), ``Pipeline``,
+``Farm`` (emitter / collector / load balancers / on-demand), ``FFMap``,
+``wrap_around`` feedback, and the accelerator mode
+(``run_then_freeze`` / ``offload`` / ``load_result`` / ``FF_EOS`` / ``wait``).
+
+Building blocks (``core.graph``): the declarative front door.  Programs are
+written as an ``FFGraph`` of composable blocks — ``seq``, ``pipeline``,
+``farm``, ``ffmap``, ``all_to_all`` (FastFlow 3's ``ff_a2a``), plus
+``wrap_around`` feedback — normalised by ``optimize()`` (pipeline
+flattening, collector-emitter collapse, farm/pipeline fusion) and executed
+through the single polymorphic ``lower(plan)``: ``plan=None`` lowers onto
+host threads over the SPSC networks; a ``ShardingPlan`` lowers pure
+farm/pipeline graphs onto the JAX mesh via ``core.device`` (shard_map farms,
+jit+vmap stages — feedback and all_to_all device lowering are roadmap items;
+use ``core.device.feedback_scan``/``tensor_map`` directly meanwhile).  The
+data pipeline, the serving engine, and the launch entry points are all
+expressed as FFGraph programs.
+
+Device side: ``core.plan`` maps logical tensor axes onto mesh axes,
+``core.device`` holds the mesh lowerings, ``core.accelerator`` treats a
+compiled SPMD step as an offload target, and ``core.perf_model`` extends the
+paper's Sec. 13 cost model with a TPU roofline.
+"""
 
 from .node import EOS, GO_ON, FFNode, FnNode
 from .queues import MPMCQueue, MPSCQueue, QueueClosed, SPMCQueue, SPSCQueue
 from .skeletons import (BroadcastLB, Farm, FF_EOS, FFMap, LoadBalancer,
                         OnDemandLB, Pipeline, RoundRobinLB, Skeleton)
+from .graph import (A2ASkeleton, Deliver, FFGraph, GraphError, Runner,
+                    all_to_all, farm, ffmap, pipeline, seq)
+from .graph import HostRunner, DeviceRunner
 from .accelerator import JaxAccelerator
 from .plan import DEFAULT_RULES, ShardingPlan, single_device_plan
 from . import device, perf_model
@@ -20,6 +46,9 @@ __all__ = [
     "SPSCQueue", "SPMCQueue", "MPSCQueue", "MPMCQueue", "QueueClosed",
     "Pipeline", "Farm", "FFMap", "Skeleton",
     "LoadBalancer", "RoundRobinLB", "OnDemandLB", "BroadcastLB",
+    "FFGraph", "GraphError", "Deliver", "Runner", "HostRunner",
+    "DeviceRunner", "A2ASkeleton",
+    "seq", "pipeline", "farm", "ffmap", "all_to_all",
     "JaxAccelerator", "ShardingPlan", "single_device_plan", "DEFAULT_RULES",
     "device", "perf_model",
 ]

@@ -1,0 +1,817 @@
+"""Building-blocks graph IR — the single front door to every skeleton.
+
+FastFlow 3 evolved the tutorial's skeleton zoo (``ff_pipeline``, ``ff_farm``,
+``ff_map``, feedback, ``ff_a2a``) into a uniform *building blocks* composition
+API: programs are graphs of sequential / parallel building blocks, normalised
+by rewrite rules, then lowered onto a runtime.  This module is that layer for
+this framework:
+
+- **IR**: :func:`seq`, :func:`pipeline`, :func:`farm`, :func:`ffmap`,
+  :func:`all_to_all` build an :class:`FFGraph` of small declarative nodes
+  (``SeqG``/``PipeG``/``FarmG``/``MapG``/``A2AG``).  ``wrap_around()`` marks
+  the feedback channel.
+- **optimize()**: normal-form rewrites — nested-pipeline flattening,
+  collector–emitter collapse (pure stages adjacent to a farm are absorbed
+  into its emitter/collector), and farm/pipeline fusion
+  (``pipe(farm(f), farm(g)) -> farm(pipe(f, g))`` for pure workers).
+- **lower(plan)**: ONE polymorphic entry point.  ``plan=None`` targets host
+  threads over the SPSC networks of core/queues.py (via core/skeletons.py);
+  a :class:`~repro.core.plan.ShardingPlan` targets the JAX mesh lowering of
+  core/device.py.  Both return a :class:`Runner` with the same surface:
+  batch ``run(stream)`` plus the paper-verbatim accelerator mode
+  (``run_then_freeze`` / ``offload`` / ``load_result`` / ``wait``).
+
+The host skeletons in core/skeletons.py remain the execution substrate; this
+module is the declarative layer every subsystem (data, serving, launch,
+examples) programs against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import traceback
+from typing import Any, Callable, List, Optional, Sequence
+
+from .node import EOS, GO_ON, FFNode, FnNode, spawn_drainer
+from .queues import MPMCQueue, MPSCQueue, SPMCQueue, SPSCQueue
+from .skeletons import (Farm, FFMap, LoadBalancer, Pipeline, Skeleton,
+                        _CollectorRunner)
+
+
+class GraphError(Exception):
+    """Raised for malformed graphs or unlowerable target combinations."""
+
+
+class Deliver:
+    """Marks an item as a *result* even inside a feedback loop: with
+    ``wrap_around()`` active, plain outputs re-enter the input stream while
+    ``Deliver(x)`` escapes to ``load_result``."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: Any):
+        self.value = value
+
+
+# ---------------------------------------------------------------------------
+# IR nodes
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SeqG:
+    """A sequential building block: an FFNode/Skeleton instance, or a plain
+    callable (``pure=True`` — assumed a stateless 1->1 map, which licenses
+    the optimizer to move/compose it and the device path to jit it)."""
+    node: Any
+    pure: bool = False
+
+    def describe(self) -> str:
+        name = self.node.__name__ if self.pure and hasattr(self.node, "__name__") \
+            else type(self.node).__name__
+        return f"seq({name})"
+
+
+@dataclasses.dataclass
+class PipeG:
+    stages: List[Any]
+
+    def describe(self) -> str:
+        return "pipe(" + " -> ".join(s.describe() for s in self.stages) + ")"
+
+
+@dataclasses.dataclass
+class FarmG:
+    workers: List[Any]
+    emitter: Optional[Any] = None
+    collector: Optional[Any] = None
+    lb: Optional[LoadBalancer] = None
+    ondemand: Optional[int] = None
+    fn: Optional[Callable] = None    # set when built from one replicated pure fn
+
+    def describe(self) -> str:
+        bits = [f"farm[{len(self.workers)}]({self.workers[0].describe()})"]
+        if self.emitter is not None:
+            bits.insert(0, f"E:{self.emitter.describe()}")
+        if self.collector is not None:
+            bits.append(f"C:{self.collector.describe()}")
+        return " ".join(bits)
+
+
+@dataclasses.dataclass
+class MapG:
+    splitter: Any
+    workers: List[Any]
+    composer: Any
+
+    def describe(self) -> str:
+        return f"map[{len(self.workers)}]({self.workers[0].describe()})"
+
+
+@dataclasses.dataclass
+class A2AG:
+    """FastFlow 3's ``ff_a2a``: every left-side worker may send each output
+    to any right-side worker, selected by ``router(item, n_right)``."""
+    left: List[Any]
+    right: List[Any]
+    router: Optional[Callable[[Any, int], int]] = None
+
+    def describe(self) -> str:
+        return f"a2a[{len(self.left)}x{len(self.right)}]"
+
+
+def _to_g(obj: Any) -> Any:
+    """Coerce user objects into IR nodes."""
+    if isinstance(obj, FFGraph):
+        if obj._wrap:
+            raise GraphError(
+                "wrap_around is only honored on the top-level graph: compose "
+                "the unwrapped subgraph and call wrap_around() on the result")
+        return obj.root
+    if isinstance(obj, (SeqG, PipeG, FarmG, MapG, A2AG)):
+        return obj
+    if isinstance(obj, (FFNode, Skeleton)):
+        return SeqG(obj, pure=False)
+    if callable(obj):
+        return SeqG(obj, pure=True)
+    raise GraphError(f"cannot use {obj!r} as a graph building block")
+
+
+# ---------------------------------------------------------------------------
+# Constructors (the public building-blocks vocabulary)
+# ---------------------------------------------------------------------------
+def seq(obj: Any, *, pure: Optional[bool] = None) -> "FFGraph":
+    g = _to_g(obj)
+    if pure is not None:
+        if not isinstance(g, SeqG):
+            raise GraphError("pure= applies only to a single node/callable, "
+                             f"not {type(g).__name__}")
+        if pure and not callable(g.node):
+            raise GraphError("pure=True requires a callable: lowering calls "
+                             f"it as a function, and {type(g.node).__name__} "
+                             "is not one")
+        # copy before overriding: _to_g may alias a node owned by another
+        # graph, whose purity must not silently change under it
+        g = dataclasses.replace(g, pure=pure)
+    return FFGraph(g)
+
+
+def pipeline(*stages: Any) -> "FFGraph":
+    if not stages:
+        raise GraphError("empty pipeline")
+    return FFGraph(PipeG([_to_g(s) for s in stages]))
+
+
+def farm(workers: Any, n: Optional[int] = None, *, emitter: Any = None,
+         collector: Any = None, lb: Optional[LoadBalancer] = None,
+         ondemand: Optional[int] = None) -> "FFGraph":
+    """``farm(fn, n)`` replicates a pure worker; ``farm([w0, w1, ...])``
+    takes explicit (possibly stateful) workers."""
+    fn = None
+    if isinstance(workers, (FFNode, Skeleton, FFGraph, SeqG, PipeG, FarmG,
+                            MapG, A2AG)):
+        g = _to_g(workers)
+        if isinstance(g, SeqG) and g.pure:   # pure blocks replicate freely
+            fn = g.node
+            ws = [SeqG(fn, pure=True) for _ in range(n if n is not None else 1)]
+        else:
+            ws = [g]                         # a single stateful worker
+            if n is not None and n != 1:
+                raise GraphError("cannot replicate a stateful worker; pass a "
+                                 "list of instances or farm(fn, n=...)")
+    elif callable(workers):
+        if n is None:
+            raise GraphError("farm(fn) needs n=<replicas>")
+        fn = workers
+        ws = [SeqG(workers, pure=True) for _ in range(n)]
+    else:
+        try:
+            ws = [_to_g(w) for w in list(workers)]
+        except TypeError as e:
+            raise GraphError(f"farm workers must be a callable, a node, or "
+                             f"a sequence of them (got {workers!r})") from e
+        if n is not None and n != len(ws):
+            raise GraphError("n disagrees with explicit worker list")
+    if not ws:
+        raise GraphError("farm with no workers")
+    return FFGraph(FarmG(ws, emitter=None if emitter is None else _to_g(emitter),
+                         collector=None if collector is None else _to_g(collector),
+                         lb=lb, ondemand=ondemand, fn=fn))
+
+
+def ffmap(splitter: Any, workers: Sequence, composer: Any) -> "FFGraph":
+    return FFGraph(MapG(_to_g(splitter), [_to_g(w) for w in workers],
+                        _to_g(composer)))
+
+
+def all_to_all(left: Sequence, right: Sequence,
+               router: Optional[Callable[[Any, int], int]] = None) -> "FFGraph":
+    ls = [_to_g(l) for l in left]
+    rs = [_to_g(r) for r in right]
+    for g in (*ls, *rs):
+        # the a2a runtime drives ff_node workers (svc/svc_init/svc_end);
+        # composite blocks have no such surface
+        if not isinstance(g, SeqG) or isinstance(g.node, Skeleton):
+            raise GraphError("all_to_all workers must be plain nodes or "
+                             f"callables, not {g.describe()}")
+    return FFGraph(A2AG(ls, rs, router))
+
+
+# ---------------------------------------------------------------------------
+# Host runtime for the all-to-all stage (over the L2 MPMC network)
+# ---------------------------------------------------------------------------
+class A2ASkeleton(Skeleton):
+    """Host lowering of ``ff_a2a``: left workers route every output through an
+    MPMC grid of SPSC lanes to a router-selected right worker; right outputs
+    are gathered by a collector thread.  EOS fans out row-wise so each right
+    worker terminates after seeing EOS from every left worker."""
+
+    def __init__(self, left: Sequence[FFNode], right: Sequence[FFNode],
+                 router: Optional[Callable[[Any, int], int]] = None,
+                 capacity: int = 512):
+        super().__init__()
+        self._left = list(left)
+        self._right = list(right)
+        self._router = router
+        self._cap = capacity
+        self._threads: List[threading.Thread] = []
+        self._col: Optional[_CollectorRunner] = None
+
+    def _left_loop(self, i: int, node: FFNode, has_input: bool) -> None:
+        nR = len(self._right)
+        rr = [i % nR]                       # stagger round-robin per producer
+
+        def send(y: Any) -> None:
+            if self._router is not None:
+                j = self._router(y, nR) % nR
+            else:
+                j, rr[0] = rr[0], (rr[0] + 1) % nR
+            self._grid.push(i, j, y)
+
+        input_eos = not has_input
+        try:
+            node._bind(send, i)
+            if node.svc_init() < 0:
+                raise RuntimeError("a2a left svc_init failed")
+            while True:
+                if has_input:
+                    t = self._spmc.lanes[i].pop()
+                    if t is EOS:
+                        input_eos = True
+                        break
+                else:
+                    t = None
+                node.svc_calls += 1
+                r = node.svc(t)
+                if r is None or r is EOS:
+                    break
+                if r is not GO_ON:
+                    send(r)
+        except BaseException as e:          # noqa: BLE001
+            node.error = e
+            traceback.print_exc()
+        finally:
+            try:
+                node.svc_end()
+            finally:
+                for j in range(nR):
+                    self._grid.push(i, j, EOS)
+                if not input_eos:
+                    # early exit (voluntary or crash): hand the lane to a
+                    # detached drainer so the feeder never wedges on it
+                    spawn_drainer(self._spmc.lanes[i].pop)
+
+    def _right_loop(self, j: int, node: FFNode) -> None:
+        nL = len(self._left)
+        lane_out = self._mpsc.lane(j)
+        eos_seen = 0
+        try:
+            node._bind(lane_out.push, j)
+            if node.svc_init() < 0:
+                raise RuntimeError("a2a right svc_init failed")
+            while eos_seen < nL:
+                item, _src = self._grid.pop(j)
+                if item is EOS:
+                    eos_seen += 1
+                    continue
+                node.svc_calls += 1
+                r = node.svc(item)
+                if r is None or r is EOS:
+                    break
+                if r is not GO_ON:
+                    lane_out.push(r)
+        except BaseException as e:          # noqa: BLE001
+            node.error = e
+            traceback.print_exc()
+        finally:
+            try:
+                node.svc_end()
+            finally:
+                lane_out.push(EOS)
+                if eos_seen < nL:
+                    # early exit: keep the grid column draining so left
+                    # producers never block on this dead worker's lanes
+                    spawn_drainer(lambda: self._grid.pop(j)[0],
+                                  nL - eos_seen)
+
+    def _start(self, in_q: Optional[SPSCQueue]) -> None:
+        nL, nR = len(self._left), len(self._right)
+        self._grid = MPMCQueue(nL, nR, self._cap)
+        self._mpsc = MPSCQueue(nR, self._cap)
+        out = self._out if self._out is not None else (lambda item: None)
+        self._col = _CollectorRunner(None, self._mpsc, out, nR)
+        self._col.start()
+        for j, node in enumerate(self._right):
+            t = threading.Thread(target=self._right_loop, args=(j, node),
+                                 daemon=True, name=f"a2a-right-{j}")
+            t.start()
+            self._threads.append(t)
+        has_input = in_q is not None
+        if has_input:
+            self._spmc = SPMCQueue(nL, self._cap)
+        for i, node in enumerate(self._left):
+            t = threading.Thread(target=self._left_loop,
+                                 args=(i, node, has_input), daemon=True,
+                                 name=f"a2a-left-{i}")
+            t.start()
+            self._threads.append(t)
+        if has_input:
+            def feed() -> None:
+                while True:
+                    item = in_q.pop()
+                    if item is EOS:
+                        self._spmc.broadcast(EOS)
+                        break
+                    self._spmc.push_rr(item)
+            t = threading.Thread(target=feed, daemon=True, name="a2a-feed")
+            t.start()
+            self._threads.append(t)
+
+    def _join(self, timeout: Optional[float] = None) -> None:
+        for t in self._threads:
+            t.join(timeout)
+        if self._col is not None:
+            self._col.join(timeout)
+
+    def _error(self) -> Optional[BaseException]:
+        for n in (*self._left, *self._right):
+            if n.error is not None:
+                return n.error
+        if self._col is not None:
+            return self._col.error
+        return None
+
+    def _alive(self) -> bool:
+        if any(t.is_alive() for t in self._threads):
+            return True
+        return self._col is not None and self._col.thread.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# The graph
+# ---------------------------------------------------------------------------
+class FFGraph:
+    def __init__(self, root: Any):
+        self.root = root
+        self._wrap = False
+
+    def wrap_around(self) -> "FFGraph":
+        """Feedback channel: the graph's output stream re-enters its input
+        (paper Sec. 11); use :class:`Deliver` to emit true results."""
+        self._wrap = True
+        return self
+
+    def describe(self) -> str:
+        d = self.root.describe()
+        return d + (" +feedback" if self._wrap else "")
+
+    # -- normal form ---------------------------------------------------------
+    def optimize(self) -> "FFGraph":
+        g = FFGraph(_normalize(self.root))
+        g._wrap = self._wrap
+        return g
+
+    # -- the single lowering entry point -------------------------------------
+    def lower(self, plan: Any = None, *, capacity: int = 512,
+              results_capacity: int = 4096, axis: str = "data") -> "Runner":
+        """``plan=None`` -> :class:`HostRunner` (threads over SPSC queues);
+        a ShardingPlan -> :class:`DeviceRunner` (core/device.py on its mesh)."""
+        if plan is None:
+            return HostRunner(self, capacity=capacity,
+                              results_capacity=results_capacity)
+        return DeviceRunner(self, plan, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# optimize(): rewrite passes
+# ---------------------------------------------------------------------------
+def _compose(f: Callable, g: Callable) -> Callable:
+    def fg(x):
+        return g(f(x))
+    fg.__name__ = "fused"
+    return fg
+
+
+def _is_pure_seq(n: Any) -> bool:
+    return isinstance(n, SeqG) and n.pure
+
+
+def _pure_of(n: Any) -> Optional[Callable]:
+    """The per-item pure function a node computes, or None if stateful."""
+    if _is_pure_seq(n):
+        return n.node
+    if isinstance(n, PipeG):
+        fns = [_pure_of(s) for s in n.stages]
+        if any(f is None for f in fns):
+            return None
+        out = fns[0]
+        for f in fns[1:]:
+            out = _compose(out, f)
+        return out
+    return None
+
+
+def _fusable_farm(n: Any) -> bool:
+    return (isinstance(n, FarmG) and n.emitter is None and n.collector is None
+            and n.lb is None and n.ondemand is None
+            and all(_pure_of(w) is not None for w in n.workers))
+
+
+def _normalize(n: Any) -> Any:
+    if isinstance(n, PipeG):
+        # 1. flatten nested pipelines
+        stages: List[Any] = []
+        for s in n.stages:
+            s = _normalize(s)
+            if isinstance(s, PipeG):
+                stages.extend(s.stages)
+            else:
+                stages.append(s)
+        # 2. farm/pipeline fusion: pipe(farm(f), farm(g)) -> farm(pipe(f,g))
+        fused: List[Any] = []
+        for s in stages:
+            prev = fused[-1] if fused else None
+            if (_fusable_farm(s) and _fusable_farm(prev)
+                    and len(prev.workers) == len(s.workers)):
+                workers = [PipeG([a, b])
+                           for a, b in zip(prev.workers, s.workers)]
+                fn = (_compose(prev.fn, s.fn)
+                      if prev.fn is not None and s.fn is not None else None)
+                fused[-1] = FarmG(workers, fn=fn)
+                continue
+            fused.append(s)
+        # 3. collector-emitter collapse: absorb pure seq stages into the
+        #    adjacent farm's emitter/collector (one thread + one queue less)
+        out: List[Any] = []
+        for s in fused:
+            prev = out[-1] if out else None
+            if (_is_pure_seq(s) and isinstance(prev, FarmG)
+                    and (prev.collector is None or _is_pure_seq(prev.collector))):
+                col = (s if prev.collector is None
+                       else SeqG(_compose(prev.collector.node, s.node), pure=True))
+                out[-1] = dataclasses.replace(prev, collector=col)
+                continue
+            if (isinstance(s, FarmG) and _is_pure_seq(prev) and len(out) > 1
+                    and (s.emitter is None or _is_pure_seq(s.emitter))):
+                # only absorb a *non-source* stage: the first pipeline stage
+                # may be a generator driven with task=None
+                em = (prev if s.emitter is None
+                      else SeqG(_compose(prev.node, s.emitter.node), pure=True))
+                out[-1] = dataclasses.replace(s, emitter=em)
+                continue
+            out.append(s)
+        return out[0] if len(out) == 1 else PipeG(out)
+    if isinstance(n, FarmG):
+        return dataclasses.replace(n, workers=[_normalize(w) for w in n.workers])
+    if isinstance(n, MapG):
+        return dataclasses.replace(n, workers=[_normalize(w) for w in n.workers])
+    if isinstance(n, A2AG):
+        return dataclasses.replace(n, left=[_normalize(l) for l in n.left],
+                                   right=[_normalize(r) for r in n.right])
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Host lowering
+# ---------------------------------------------------------------------------
+def _mark_single_use(node: Any) -> Any:
+    """Stateful node instances carry consumed counters and dead threads after
+    a run; building them into a second runner silently replays stale state,
+    so re-lowering is an error — build a fresh instance/graph instead."""
+    if getattr(node, "_ff_lowered", False):
+        raise GraphError(f"{type(node).__name__} instance is already part of "
+                         "a lowered runner; stateful nodes are single-use — "
+                         "construct a fresh graph to run again")
+    node._ff_lowered = True
+    return node
+
+
+def _build_host(n: Any, capacity: int) -> Any:
+    if isinstance(n, SeqG):
+        return FnNode(n.node) if n.pure else _mark_single_use(n.node)
+    if isinstance(n, PipeG):
+        return Pipeline(*[_build_host(s, capacity) for s in n.stages],
+                        capacity=capacity)
+    if isinstance(n, FarmG):
+        # a LoadBalancer binds to one farm's lanes at _start: sharing it
+        # across lowerings would let one runner steal another's routing
+        f = Farm([_build_host(w, capacity) for w in n.workers],
+                 lb=None if n.lb is None else _mark_single_use(n.lb),
+                 capacity=capacity)
+        if n.emitter is not None:
+            f.add_emitter(_build_host(n.emitter, capacity))
+        if n.collector is not None:
+            f.add_collector(_build_host(n.collector, capacity))
+        if n.ondemand is not None:
+            f.set_scheduling_ondemand(n.ondemand)
+        return f
+    if isinstance(n, MapG):
+        return FFMap(_build_host(n.splitter, capacity),
+                     [_build_host(w, capacity) for w in n.workers],
+                     _build_host(n.composer, capacity), capacity=capacity)
+    if isinstance(n, A2AG):
+        return A2ASkeleton([_build_host(l, capacity) for l in n.left],
+                           [_build_host(r, capacity) for r in n.right],
+                           router=n.router, capacity=capacity)
+    raise GraphError(f"cannot host-lower {n!r}")
+
+
+class Runner:
+    """Common result surface of ``FFGraph.lower``."""
+
+    def run(self, stream: Optional[Sequence] = None) -> List[Any]:
+        raise NotImplementedError
+
+    def ffTime(self) -> float:
+        return (self._t1 - self._t0) * 1e3
+
+
+class HostRunner(Runner):
+    """Graph lowered onto host threads + SPSC queues, exposing both batch
+    ``run`` and the paper's accelerator mode (the compat adapter behind
+    ``InferenceEngine`` / ``JaxAccelerator``-style usage)."""
+
+    def __init__(self, graph: FFGraph, capacity: int = 512,
+                 results_capacity: int = 4096):
+        built = _build_host(graph.root, capacity)
+        if not isinstance(built, Skeleton):
+            built = Pipeline(built, capacity=capacity)
+        self._skel = built
+        self._wrap = graph._wrap
+        self._cap = capacity
+        self._results = SPSCQueue(results_capacity)
+        self._in_q: Optional[SPSCQueue] = None
+        # the input queue can see several producers (offload, the feedback
+        # edge, wait()'s error unwind): serialise pushes so the SPSC
+        # invariant holds
+        self._push_lock = threading.Lock()
+        self._t0 = self._t1 = 0.0
+
+    # -- wiring ---------------------------------------------------------------
+    def _push_in(self, item: Any) -> None:
+        # per-attempt locking (never a blocking push while holding the lock,
+        # or wait()'s unwind could deadlock on it), and bail out once the
+        # whole network has died — its results stream is already closed, so
+        # blocking a producer on a queue nobody drains helps no one.  A
+        # degraded-but-alive network keeps consuming (dead nodes drain their
+        # inputs), so items are only dropped when no thread is left.
+        while True:
+            with self._push_lock:
+                if self._in_q.try_push(item):
+                    return
+            if not self._skel._alive():   # terminated (cleanly or by error)
+                return
+            time.sleep(1e-5)
+
+    def _route(self, item: Any) -> None:
+        if item is EOS:
+            self._results.push(EOS)
+        elif isinstance(item, Deliver):
+            self._results.push(item.value)
+        elif self._wrap:
+            self._push_in(item)
+        else:
+            self._results.push(item)
+
+    # -- accelerator mode (paper Sec. 9, verbatim names) ----------------------
+    def run_then_freeze(self) -> int:
+        self._t0 = time.perf_counter()
+        self._in_q = self._skel._make_input(self._cap)
+        self._skel._bind(self._route)
+        self._skel._start(self._in_q)
+        return 0
+
+    def offload(self, task: Any) -> None:
+        if self._in_q is None:
+            raise RuntimeError("offload before run_then_freeze")
+        self._push_in(task)
+
+    def load_result(self, timeout: Optional[float] = None) -> tuple[bool, Any]:
+        item = self._results.pop(timeout)
+        return (False, None) if item is EOS else (True, item)
+
+    def load_result_nb(self) -> tuple[bool, Any]:
+        ok, item = self._results.try_pop()
+        if not ok or item is EOS:
+            return False, None
+        return True, item
+
+    def pending_inputs(self) -> int:
+        """Items offloaded but not yet consumed by the first stage — lets
+        callers implement admission back-pressure over the full backlog."""
+        return 0 if self._in_q is None else len(self._in_q)
+
+    def wait(self, timeout: Optional[float] = None) -> int:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self.error() is not None and self._in_q is not None:
+                # a stage died mid-network: stages upstream of the fault are
+                # still blocked on their input queues — unwind them with EOS
+                # so join() terminates and the error is reported instead of
+                # hanging.  Non-blocking (retried each slice) so a full queue
+                # whose consumer died cannot wedge the unwind itself.
+                with self._push_lock:
+                    self._in_q.try_push(EOS)
+            slice_t = 0.1
+            if deadline is not None:
+                slice_t = min(slice_t, max(0.0, deadline - time.monotonic()))
+            self._skel._join(slice_t)
+            if not self._skel._alive():
+                # terminated: feed one EOS to the input so any detached
+                # drainer left by a self-terminated first stage can finish
+                # instead of polling a dead queue for the process lifetime.
+                # Retried briefly — a live drainer frees a slot of a full
+                # queue within its 1ms backoff; with no consumer we give up.
+                if self._in_q is not None:
+                    for _ in range(100):
+                        with self._push_lock:
+                            if self._in_q.try_push(EOS):
+                                break
+                        time.sleep(1e-3)
+                break
+            if deadline is not None and time.monotonic() >= deadline:
+                break
+        self._t1 = time.perf_counter()
+        return -1 if self.error() is not None else 0
+
+    def error(self) -> Optional[BaseException]:
+        return self._skel._error()
+
+    # -- source / streaming mode ----------------------------------------------
+    def start_stream(self) -> "HostRunner":
+        """Start a source graph (first stage generates); results stream into
+        the bounded results queue — back-pressure for prefetch pipelines."""
+        self._t0 = time.perf_counter()
+        if self._wrap:
+            self._in_q = self._skel._make_input(self._cap)
+        self._skel._bind(self._route)
+        self._skel._start(self._in_q)
+        return self
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        """Next streamed result; None at end-of-stream."""
+        item = self._results.pop(timeout)
+        return None if item is EOS else item
+
+    # -- batch convenience -----------------------------------------------------
+    def run_and_wait_end(self) -> int:
+        """Run a source graph to completion.  There is no result consumer, so
+        outputs are discarded (sinks act via side effects, as in the paper's
+        run_and_wait_end) — the bounded results queue must not back-pressure
+        a network nobody is draining."""
+        self._t0 = time.perf_counter()
+        if self._wrap:
+            self._in_q = self._skel._make_input(self._cap)
+
+            def route(item: Any) -> None:
+                if item is not EOS and not isinstance(item, Deliver):
+                    self._push_in(item)
+            self._skel._bind(route)
+        else:
+            self._skel._bind(lambda item: None)
+        self._skel._start(self._in_q)
+        self._skel._join()
+        self._t1 = time.perf_counter()
+        return -1 if self.error() is not None else 0
+
+    def run(self, stream: Optional[Sequence] = None,
+            timeout: Optional[float] = None) -> List[Any]:
+        """Feed ``stream`` (or let sources run) and collect all outputs.
+        ``timeout`` bounds each blocking wait, not the whole run; on
+        TimeoutError the feeder stops but node threads cannot be killed —
+        discard the runner (graphs are single-use anyway)."""
+        self._abandoned = False
+        if stream is None:
+            self.start_stream()
+        else:
+            self.run_then_freeze()
+
+            def feed() -> None:
+                # a separate feeder so collection below drains results while
+                # offloading — a long stream must not fill every queue and
+                # deadlock against an unread results queue
+                for x in stream:
+                    if self._abandoned:
+                        return
+                    self.offload(x)
+                if not self._wrap:      # feedback graphs terminate themselves
+                    self.offload(EOS)
+            threading.Thread(target=feed, daemon=True,
+                             name="ff-run-feeder").start()
+        out = []
+        try:
+            while True:
+                item = self._results.pop(timeout)
+                if item is EOS:
+                    break
+                out.append(item)
+        except BaseException:
+            self._abandoned = True
+            raise
+        if self.wait(timeout) != 0:
+            raise self.error()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Device lowering
+# ---------------------------------------------------------------------------
+def _device_fn(n: Any) -> tuple[Callable, bool]:
+    """(per-item function, uses-farm?) for a device-lowerable subgraph."""
+    if isinstance(n, SeqG):
+        if not n.pure:
+            raise GraphError("device lowering needs pure stages "
+                             f"(got {type(n.node).__name__})")
+        return n.node, False
+    if isinstance(n, PipeG):
+        fns = [_device_fn(s) for s in n.stages]
+        fn = fns[0][0]
+        for f, _ in fns[1:]:
+            fn = _compose(fn, f)
+        return fn, any(farm for _, farm in fns)
+    if isinstance(n, FarmG):
+        if n.lb is not None or n.ondemand is not None:
+            # a custom balancer (e.g. BroadcastLB) changes which/how many
+            # outputs exist; SPMD batch sharding is round-robin only
+            raise GraphError("device farm lowering supports only the default "
+                             "round-robin schedule (no lb/ondemand)")
+        if n.fn is None and len(n.workers) > 1:
+            # an explicit worker list may be heterogeneous; SPMD lowering
+            # replicates ONE function, so silently picking workers[0] would
+            # diverge from the host round-robin
+            raise GraphError("device farm lowering is SPMD: build the farm "
+                             "from one replicated worker (farm(fn, n=...))")
+        fn = n.fn if n.fn is not None else _pure_of(n.workers[0])
+        if fn is None:
+            raise GraphError("device farm lowering needs pure workers")
+        for part in (n.emitter, n.collector):
+            if part is not None:
+                if not _is_pure_seq(part):
+                    raise GraphError("device farm lowering needs pure "
+                                     "emitter/collector")
+        if n.emitter is not None:
+            fn = _compose(n.emitter.node, fn)
+        if n.collector is not None:
+            fn = _compose(fn, n.collector.node)
+        return fn, True
+    raise GraphError(f"no device lowering for {type(n).__name__} "
+                     "(use the host path or feedback_scan/tensor_map directly)")
+
+
+class DeviceRunner(Runner):
+    """Graph lowered through core/device.py onto a JAX mesh: the stream is
+    stacked into a batch, farm stages become ``shard_map`` over the data axis
+    (round-robin == even batch sharding), pure seq stages are jitted and
+    vmapped.  Semantics match :class:`HostRunner` on pure graphs up to
+    output ordering (the host farm collector is arrival-ordered)."""
+
+    def __init__(self, graph: FFGraph, plan: Any, axis: str = "data"):
+        import jax
+        from . import device as dev
+        if graph._wrap:
+            raise GraphError("device feedback lowers via "
+                             "core.device.feedback_scan, not lower(plan)")
+        fn, uses_farm = _device_fn(graph.root)
+        self._axis_size = int(plan.mesh.shape[axis]) if uses_farm else 1
+        if uses_farm:
+            self._batched = jax.jit(dev.farm_map(lambda xs: jax.vmap(fn)(xs),
+                                                 plan.mesh, axis=axis))
+        else:
+            self._batched = jax.jit(jax.vmap(fn))
+        self._t0 = self._t1 = 0.0
+
+    def run(self, stream: Sequence) -> List[Any]:
+        import jax
+        import jax.numpy as jnp
+        self._t0 = time.perf_counter()
+        items = [jnp.asarray(x) for x in stream]
+        if not items:
+            return []
+        n = len(items)
+        pad = (-n) % self._axis_size
+        xs = jnp.stack(items + items[:1] * pad)
+        ys = jax.block_until_ready(self._batched(xs))
+        self._t1 = time.perf_counter()
+        # unstack the batch axis of every output leaf (a per-item function
+        # may return a pytree, not just one array)
+        return [jax.tree.map(lambda t: t[i], ys) for i in range(n)]

@@ -35,6 +35,29 @@ EOS = _Sentinel("EOS")            # FastFlow: returning NULL / FF_EOS mark
 _NO_INPUT = _Sentinel("NO_INPUT")  # activation token for source nodes
 
 
+def spawn_drainer(pop: Callable[[], Any], n_eos: int = 1) -> None:
+    """A node that exits before consuming its input's end-of-stream — by
+    error or by voluntarily returning EOS/None — must never wedge upstream
+    producers on its full queue.  Hand the stream to a detached daemon
+    drainer (discarding items until ``n_eos`` EOS marks arrive) so the
+    node's own thread stays joinable even when the terminating EOS never
+    arrives.  ``pop`` abstracts the channel: an SPSC pop, an MPSC pop_any,
+    or an MPMC column pop."""
+    def drain() -> None:
+        try:
+            n = n_eos
+            while n > 0:
+                if pop() is EOS:
+                    n -= 1
+        except BaseException:   # noqa: BLE001 - queue closed etc.
+            pass
+    threading.Thread(target=drain, daemon=True, name="ff-drain").start()
+
+
+def _drain_until_eos(in_q: "SPSCQueue") -> None:
+    spawn_drainer(in_q.pop)
+
+
 class FFNode:
     """Subclass and override ``svc`` (mandatory), ``svc_init``/``svc_end``
     (optional), exactly as in the paper."""
@@ -78,6 +101,7 @@ class FFNode:
         """Thread body: pull from input stream (if any), call svc, route
         output.  End-of-stream handling follows the paper: EOS on the input
         stream terminates the node (svc not called) and propagates."""
+        input_eos = in_q is None      # source nodes have no stream to drain
         try:
             if self.svc_init() < 0:
                 raise RuntimeError(f"svc_init failed in {type(self).__name__}")
@@ -90,6 +114,7 @@ class FFNode:
                 else:
                     task = in_q.pop()
                     if task is EOS:
+                        input_eos = True
                         break
                 self.svc_calls += 1
                 result = self.svc(None if task is _NO_INPUT else task)
@@ -108,6 +133,8 @@ class FFNode:
             finally:
                 if self._out is not None:
                     self._out(EOS)
+                if not input_eos:
+                    _drain_until_eos(in_q)
 
     def _start(self, in_q: Optional[SPSCQueue]) -> None:
         self.thread = threading.Thread(
@@ -118,6 +145,9 @@ class FFNode:
     def _join(self, timeout: Optional[float] = None) -> None:
         if self.thread is not None:
             self.thread.join(timeout)
+
+    def _alive(self) -> bool:
+        return self.thread is not None and self.thread.is_alive()
 
 
 class FnNode(FFNode):

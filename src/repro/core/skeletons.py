@@ -18,7 +18,7 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, List, Optional, Sequence
 
-from .node import EOS, GO_ON, FFNode, FnNode
+from .node import EOS, GO_ON, FFNode, FnNode, spawn_drainer
 from .queues import MPSCQueue, SPMCQueue, SPSCQueue
 
 FF_EOS = EOS  # paper's name for the end-of-stream mark
@@ -146,6 +146,9 @@ class Skeleton:
     def _error(self) -> Optional[BaseException]:
         raise NotImplementedError
 
+    def _alive(self) -> bool:
+        raise NotImplementedError
+
     # paper API ---------------------------------------------------------------
     def run_and_wait_end(self) -> int:
         self._t0 = time.perf_counter()
@@ -262,6 +265,9 @@ class Pipeline(Skeleton):
                 return e
         return None
 
+    def _alive(self) -> bool:
+        return any(st._alive() for st in self._stages)
+
     def ffStats(self) -> dict:
         return {f"stage{i}": getattr(s, "svc_calls", None)
                 for i, s in enumerate(self._stages)}
@@ -286,10 +292,10 @@ class _CollectorRunner:
                                        name="ff-collector")
 
     def _run(self) -> None:
+        eos_seen = 0
         try:
             if self.node is not None and self.node.svc_init() < 0:
                 raise RuntimeError("collector svc_init failed")
-            eos_seen = 0
             while eos_seen < self.n_workers:
                 item, _lane = self.mpsc.pop_any()
                 if item is EOS:
@@ -314,6 +320,12 @@ class _CollectorRunner:
                     self.node.svc_end()
             finally:
                 self.out(EOS)
+                # after closing the output stream, drain remaining worker
+                # output until every EOS arrives so no worker wedges on this
+                # collector's full lanes — whether it died or self-terminated
+                if eos_seen < self.n_workers:
+                    spawn_drainer(lambda: self.mpsc.pop_any()[0],
+                                  self.n_workers - eos_seen)
 
     def start(self) -> None:
         self.thread.start()
@@ -421,6 +433,13 @@ class Farm(Skeleton):
             return self._collector.error
         return None
 
+    def _alive(self) -> bool:
+        parts = [self._emitter, getattr(self, "_fwd", None), *self._workers]
+        if any(p is not None and p._alive() for p in parts):
+            return True
+        return (self._col_runner is not None
+                and self._col_runner.thread.is_alive())
+
     def ffStats(self) -> dict:
         return {
             "workers": len(self._workers),
@@ -460,6 +479,9 @@ class FFMap(Skeleton):
 
     def _error(self):
         return self._exec._error()
+
+    def _alive(self) -> bool:
+        return self._exec._alive()
 
     def _make_input(self, capacity: int = 512):
         q = super()._make_input(capacity)

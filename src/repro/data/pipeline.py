@@ -1,26 +1,26 @@
-"""Host data pipeline = the paper's skeletons carrying real traffic.
+"""Host data pipeline = an FFGraph program carrying real traffic.
 
-A two-stage FastFlow pipeline feeds the training loop:
+A two-stage building-blocks pipeline feeds the training loop:
 
-    [Reader emitter] --SPSC--> [prefetch farm: batch assembly workers]
-        --SPSC--> [device-put stage] --bounded SPSC--> train loop
+    pipeline( Reader source, DevicePut stage )  --lower()-->  host threads
 
-The bounded final queue provides back-pressure (the device never waits on
-the host unless the host truly falls behind — and the host can never run
-unboundedly ahead), exactly the role of FastFlow's fixed-capacity lanes.
+    [Reader emitter] --SPSC--> [device-put stage] --bounded SPSC--> train loop
+
+The graph is lowered through the single ``FFGraph.lower()`` entry point onto
+host threads; the runner's bounded results queue provides back-pressure (the
+device never waits on the host unless the host truly falls behind — and the
+host can never run unboundedly ahead), exactly the role of FastFlow's
+fixed-capacity lanes.
 """
 
 from __future__ import annotations
 
-import threading
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Optional
 
 import jax
-import numpy as np
 
-from ..core.node import EOS, GO_ON, FFNode
-from ..core.queues import SPSCQueue
-from ..core.skeletons import Farm, Pipeline
+from ..core.graph import FFGraph, pipeline as ff_pipeline
+from ..core.node import FFNode
 
 
 class _ReaderNode(FFNode):
@@ -53,28 +53,24 @@ class _DevicePutNode(FFNode):
 
 class DataPipeline:
     """run_then_freeze()-style accelerator interface: the training loop just
-    calls ``get()``; EOS -> None."""
+    calls ``get()``; EOS -> None.  ``self.graph`` is the FFGraph program."""
 
     def __init__(self, source, shardings=None, n_batches: Optional[int] = None,
                  prefetch: int = 2):
         self.source = source
-        self._out = SPSCQueue(max(2, prefetch))
-        self._pipe = Pipeline(_ReaderNode(source, n_batches),
-                              _DevicePutNode(shardings),
-                              capacity=max(2, prefetch))
-        self._pipe._bind(lambda item: self._out.push(item))
+        self.graph: FFGraph = ff_pipeline(_ReaderNode(source, n_batches),
+                                          _DevicePutNode(shardings))
+        self._runner = self.graph.lower(capacity=max(2, prefetch),
+                                        results_capacity=max(2, prefetch))
         self._started = False
 
     def start(self) -> "DataPipeline":
-        self._pipe._start(None)
+        self._runner.start_stream()
         self._started = True
         return self
 
     def get(self, timeout: Optional[float] = None):
-        item = self._out.pop(timeout)
-        if item is EOS:
-            return None
-        return item
+        return self._runner.get(timeout)
 
     def state(self) -> dict:
         # NOTE: prefetched-but-unconsumed batches are re-generated on

@@ -37,6 +37,7 @@ def main():
 
     eng = InferenceEngine(cfg, plan, params, max_batch=args.max_batch,
                           cache_len=args.cache_len)
+    print(f"engine graph: {eng.graph.describe()}")
     eng.run_then_freeze()
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()

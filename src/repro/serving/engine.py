@@ -1,33 +1,41 @@
-"""Serving engine — FastFlow accelerator mode (paper Sec. 9) around a
-continuous-batching decode loop.
+"""Serving engine — continuous-batching decode expressed as an FFGraph
+program in the paper's accelerator mode (Sec. 9).
 
-Skeleton structure:
-  emitter    = the SLOT SCHEDULER: a custom load balancer whose
-               ``selectworker`` picks a free decode slot for each incoming
-               request (paper Sec. 8.3 — user-defined scheduling policy);
-  workers    = the batched SPMD decode step (all slots advance together —
+The engine *is* a streaming network now, lowered through the single
+``FFGraph.lower()`` path:
+
+    pipeline( AdmitNode, DecodeNode, CollectNode ).wrap_around()
+
+  AdmitNode    the SLOT SCHEDULER emitter: picks a free decode slot for each
+               incoming request (paper Sec. 8.3 — user-defined scheduling),
+               prefills its cache, and launches the batch tick;
+  DecodeNode   the batched SPMD decode worker (all slots advance together —
                the device farm);
-  collector  = per-request output queues (load_result / load_result_nb);
-  feedback   = generated tokens re-entering the decode step (wrap_around).
+  CollectNode  the per-request collector: appends tokens, delivers finished
+               requests (``Deliver`` escapes the loop to ``load_result``);
+  feedback     the batch tick re-entering admission (``wrap_around``), i.e.
+               generated tokens looping back into the decode step.
 
-The host API is the paper's accelerator API verbatim: ``run_then_freeze()``
-starts the engine, ``offload(request)`` submits, ``load_result()`` blocks
-for the next finished request, ``offload(FF_EOS)`` + ``wait()`` shut down.
+Exactly one tick circulates, so the batched state (caches / cur_tok / pos /
+active_mask) is touched by one node at a time.  The host API is the paper's
+accelerator API verbatim: ``run_then_freeze()`` starts the engine,
+``offload(request)`` submits, ``load_result()`` blocks for the next finished
+request, ``offload(FF_EOS)`` + ``wait()`` shut down.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.node import EOS
-from ..core.queues import SPSCQueue
+from ..core.graph import Deliver, pipeline
+from ..core.node import EOS, GO_ON, FFNode, _Sentinel
 from ..models.lm import LM
 from ..runtime.steps import make_decode_step, make_prefill_step
 
@@ -59,7 +67,134 @@ class SlotScheduler:
         self.free.append(slot)
 
 
+_TICK = _Sentinel("TICK")     # the circulating batch step
+_DRAIN = _Sentinel("DRAIN")   # FF_EOS translated so admission can drain first
+
+
+class _BatchState:
+    """The batched decode state: KV caches for B slots + bookkeeping.
+    Owned by whichever node currently holds the tick."""
+
+    def __init__(self, cfg, B: int, cache_len: int):
+        from ..configs.base import cache_specs
+        self.caches = jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype),
+                                   cache_specs(cfg, B, cache_len, None))
+        self.cur_tok = jnp.zeros((B, 1), jnp.int32)
+        self.pos = jnp.zeros((B,), jnp.int32)
+        self.active_mask = np.zeros((B,), bool)
+        self.last_toks: Optional[np.ndarray] = None
+
+
+class AdmitNode(FFNode):
+    """Slot-scheduler emitter: admits requests into free slots (prefill +
+    cache insert) and emits the tick while any slot is live.  Terminates the
+    whole loop (returns EOS) once draining and idle."""
+
+    def __init__(self, state: _BatchState, sched: SlotScheduler, params,
+                 prefill, insert):
+        super().__init__()
+        self.state = state
+        self.sched = sched
+        self.params = params
+        self._prefill = prefill
+        self._insert = insert
+        self.pending: Deque[Request] = collections.deque()
+        self.draining = False
+        self.holding = True          # the tick starts in the emitter's hand
+
+    def _admit_pending(self) -> None:
+        st = self.state
+        while self.pending and self.sched.free:
+            req = self.pending.popleft()
+            slot = self.sched.selectworker()
+            req.tokens = []
+            req.submit_t = time.perf_counter()
+            self.sched.active[slot] = req
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache1 = self._prefill(self.params, {"tokens": prompt})
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            st.caches, st.cur_tok, st.pos = self._insert(
+                st.caches, cache1, st.cur_tok, st.pos, jnp.asarray(slot),
+                tok, jnp.asarray(prompt.shape[1], jnp.int32))
+            req.tokens.append(int(tok[0, 0]))
+            st.active_mask[slot] = True
+
+    def _maybe_go(self):
+        if not self.holding:
+            return GO_ON                      # tick is downstream; queue up
+        self._admit_pending()
+        if self.state.active_mask.any():
+            self.holding = False
+            return _TICK
+        if self.draining and not self.pending:
+            return EOS                        # unwinds decode + collect too
+        return GO_ON                          # idle: hold the tick, wait
+
+    def svc(self, item):
+        if item is _DRAIN:
+            self.draining = True
+        elif item is _TICK:
+            self.holding = True               # back from the feedback edge
+        else:
+            self.pending.append(item)
+        return self._maybe_go()
+
+
+class DecodeNode(FFNode):
+    """The batched decode worker: one SPMD step advances every active slot."""
+
+    def __init__(self, state: _BatchState, params, decode):
+        super().__init__()
+        self.state = state
+        self.params = params
+        self._decode = decode
+        self.steps = 0
+
+    def svc(self, _tick):
+        st = self.state
+        nt, logits, st.caches = self._decode(
+            self.params, st.caches, {"token": st.cur_tok, "pos": st.pos})
+        st.cur_tok = nt
+        st.pos = st.pos + jnp.asarray(st.active_mask, jnp.int32)
+        self.steps += 1
+        st.last_toks = np.asarray(nt[:, 0])
+        return _TICK
+
+
+class CollectNode(FFNode):
+    """Per-request collector: routes each slot's token to its request,
+    delivers finished requests out of the loop, feeds the tick back."""
+
+    def __init__(self, state: _BatchState, sched: SlotScheduler,
+                 eos_token: Optional[int]):
+        super().__init__()
+        self.state = state
+        self.sched = sched
+        self.eos_token = eos_token
+
+    def svc(self, _tick):
+        st = self.state
+        for slot in list(self.sched.active):
+            req = self.sched.active[slot]
+            if not st.active_mask[slot]:
+                continue
+            t = int(st.last_toks[slot])
+            req.tokens.append(t)
+            finished = (len(req.tokens) >= req.max_new_tokens or
+                        (self.eos_token is not None and t == self.eos_token))
+            if finished:
+                req.done = True
+                req.finish_t = time.perf_counter()
+                st.active_mask[slot] = False
+                self.sched.release(slot)
+                self.ff_send_out(Deliver(req))
+        return _TICK                          # wrap_around -> AdmitNode
+
+
 class InferenceEngine:
+    """Continuous-batching engine: an FFGraph program behind the paper's
+    accelerator surface (the compat adapter is ``HostRunner``)."""
+
     def __init__(self, cfg, plan, params, *, max_batch: int = 4,
                  cache_len: int = 256, eos_token: Optional[int] = None):
         self.cfg = cfg
@@ -70,30 +205,35 @@ class InferenceEngine:
         self.eos_token = eos_token
         self.model = LM(cfg)
 
-        self._prefill = jax.jit(make_prefill_step(cfg, plan, cache_len))
-        self._decode = jax.jit(make_decode_step(cfg, plan, cache_len))
-        self._insert = jax.jit(self._insert_impl)
+        prefill = jax.jit(make_prefill_step(cfg, plan, cache_len))
+        decode = jax.jit(make_decode_step(cfg, plan, cache_len))
+        insert = jax.jit(self._insert_impl)
 
-        # batched state: caches for B slots + per-slot bookkeeping
-        self.caches = jax.tree.map(
-            lambda t: jnp.zeros(t.shape, t.dtype),
-            self._cache_template())
-        self.cur_tok = jnp.zeros((self.B, 1), jnp.int32)
-        self.pos = jnp.zeros((self.B,), jnp.int32)
-        self.active_mask = np.zeros((self.B,), bool)
-
+        self.state = _BatchState(cfg, self.B, cache_len)
         self.sched = SlotScheduler(self.B)
-        self._in: SPSCQueue = SPSCQueue(256)
-        self._out: SPSCQueue = SPSCQueue(1024)
-        self._thread: Optional[threading.Thread] = None
-        self.error: Optional[BaseException] = None
-        self.steps = 0
+        self._admit = AdmitNode(self.state, self.sched, params, prefill,
+                                insert)
+        self._decode_node = DecodeNode(self.state, params, decode)
+        self._collect = CollectNode(self.state, self.sched, eos_token)
+
+        self.graph = pipeline(self._admit, self._decode_node,
+                              self._collect).wrap_around()
+        # admission back-pressure: the bounded-lane property of the old
+        # 256-slot input queue — offload() blocks once this many requests
+        # are waiting for a slot, instead of growing host memory unboundedly
+        self.max_pending = 256
+        self._runner = self.graph.lower(capacity=self.max_pending,
+                                        results_capacity=1024)
+
+    @property
+    def steps(self) -> int:
+        return self._decode_node.steps
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._runner.error()
 
     # -- caches -----------------------------------------------------------------
-    def _cache_template(self):
-        from ..configs.base import cache_specs
-        return cache_specs(self.cfg, self.B, self.cache_len, None)
-
     def _insert_impl(self, caches, new_cache, cur_tok, pos, slot, tok, p):
         """Write a single prefilled (B=1) cache into slot ``slot``."""
         def put(c, n):
@@ -107,95 +247,26 @@ class InferenceEngine:
 
     # -- paper accelerator API -----------------------------------------------------
     def run_then_freeze(self) -> int:
-        self._thread = threading.Thread(target=self._loop, daemon=True,
-                                        name="inference-engine")
-        self._thread.start()
-        return 0
+        return self._runner.run_then_freeze()
 
     def offload(self, req) -> None:
-        self._in.push(req)
+        """Submit a request (single producer, as in the paper's accelerator
+        mode).  Blocks once ``max_pending`` requests are waiting for a slot —
+        counting both the admission list and the not-yet-admitted input
+        queue — so host memory stays bounded under overload."""
+        delay = 1e-5
+        while (req is not EOS and self.error is None
+               and (len(self._admit.pending)
+                    + self._runner.pending_inputs()) >= self.max_pending):
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-2)    # park, don't spin, while throttled
+        self._runner.offload(_DRAIN if req is EOS else req)
 
     def load_result(self, timeout: Optional[float] = None):
-        item = self._out.pop(timeout)
-        if item is EOS:
-            return False, None
-        return True, item
+        return self._runner.load_result(timeout)
 
     def load_result_nb(self):
-        ok, item = self._out.try_pop()
-        if not ok or item is EOS:
-            return False, None
-        return True, item
+        return self._runner.load_result_nb()
 
     def wait(self, timeout: Optional[float] = None) -> int:
-        if self._thread is not None:
-            self._thread.join(timeout)
-        return -1 if self.error is not None else 0
-
-    # -- engine loop -------------------------------------------------------------
-    def _admit(self) -> bool:
-        admitted = False
-        while self.sched.free:
-            ok, req = self._in.try_pop()
-            if not ok:
-                break
-            if req is EOS:
-                self._draining = True
-                break
-            slot = self.sched.selectworker()
-            req.tokens = []
-            req.submit_t = time.perf_counter()
-            self.sched.active[slot] = req
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache1 = self._prefill(self.params, {"tokens": prompt})
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            self.caches, self.cur_tok, self.pos = self._insert(
-                self.caches, cache1, self.cur_tok, self.pos,
-                jnp.asarray(slot), tok, jnp.asarray(prompt.shape[1],
-                                                    jnp.int32))
-            req.tokens.append(int(tok[0, 0]))
-            self.active_mask[slot] = True
-            admitted = True
-        return admitted
-
-    def _loop(self) -> None:
-        self._draining = False
-        try:
-            while True:
-                self._admit()
-                if not self.active_mask.any():
-                    if self._draining and self._in.empty():
-                        break
-                    ok, _peek = (not self._in.empty()), None
-                    if not ok:
-                        time.sleep(1e-4)
-                    continue
-                nt, logits, self.caches = self._decode(
-                    self.params, self.caches,
-                    {"token": self.cur_tok, "pos": self.pos})
-                self.cur_tok = nt
-                self.pos = self.pos + jnp.asarray(
-                    self.active_mask, jnp.int32)  # only active slots advance
-                self.steps += 1
-                toks = np.asarray(nt[:, 0])
-                for slot in list(self.sched.active):
-                    req = self.sched.active[slot]
-                    if not self.active_mask[slot]:
-                        continue
-                    t = int(toks[slot])
-                    req.tokens.append(t)
-                    finished = (len(req.tokens) >= req.max_new_tokens or
-                                (self.eos_token is not None
-                                 and t == self.eos_token))
-                    if finished:
-                        req.done = True
-                        req.finish_t = time.perf_counter()
-                        self.active_mask[slot] = False
-                        self.sched.release(slot)
-                        self._out.push(req)
-        except BaseException as e:   # noqa: BLE001
-            self.error = e
-            import traceback
-            traceback.print_exc()
-        finally:
-            self._out.push(EOS)
+        return self._runner.wait(timeout)

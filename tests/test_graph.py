@@ -1,0 +1,540 @@
+"""Building-blocks graph API: construction, optimize() normal-form
+invariants (semantics preserved), all-to-all routing, feedback via Deliver,
+and host-vs-device lowering parity through the single lower() entry point."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Deliver, FF_EOS, FFNode, GO_ON, GraphError,
+                        all_to_all, farm, ffmap, pipeline, seq)
+from repro.core.graph import FarmG, PipeG, SeqG
+
+
+class Gen(FFNode):
+    def __init__(self, n):
+        super().__init__()
+        self.i, self.n = 1, n
+
+    def svc(self, _):
+        self.i += 1
+        return self.i if self.i <= self.n else None
+
+
+class Sink(FFNode):
+    def __init__(self):
+        super().__init__()
+        self.got = []
+
+    def svc(self, t):
+        self.got.append(t)
+        return GO_ON
+
+
+class Sieve(FFNode):
+    def __init__(self):
+        super().__init__()
+        self.f = 0
+
+    def svc(self, t):
+        if self.f == 0:
+            self.f = t
+            return GO_ON
+        return GO_ON if t % self.f == 0 else t
+
+
+# -- construction -------------------------------------------------------------
+def test_construction_coerces_blocks():
+    g = pipeline(Gen(5), lambda x: x + 1, farm(lambda x: x, n=2))
+    assert isinstance(g.root, PipeG)
+    s0, s1, s2 = g.root.stages
+    assert isinstance(s0, SeqG) and not s0.pure
+    assert isinstance(s1, SeqG) and s1.pure
+    assert isinstance(s2, FarmG) and len(s2.workers) == 2
+    assert "pipe(" in g.describe()
+
+
+def test_construction_rejects_bad_blocks():
+    with pytest.raises(GraphError):
+        pipeline()
+    with pytest.raises(GraphError):
+        farm(lambda x: x)                    # replicated fn needs n
+    with pytest.raises(GraphError):
+        seq(object())
+    with pytest.raises(GraphError):
+        farm(Sink(), n=3)                    # stateful node can't replicate
+    with pytest.raises(GraphError):
+        farm(42)
+
+
+def test_farm_replicates_pure_seq_worker():
+    g = farm(seq(lambda x: x + 1, pure=True), n=4)
+    assert sorted(g.lower().run(range(8))) == list(range(1, 9))
+
+
+def test_offload_after_clean_termination_returns():
+    class Once(FFNode):
+        def svc(self, t):
+            return None                      # terminate on first item
+
+    r = pipeline(Once()).lower(capacity=4)
+    r.run_then_freeze()
+    r.offload(1)
+    assert r.wait(timeout=30) == 0
+    for i in range(20):                      # beyond capacity: must not spin
+        r.offload(i)
+
+
+def test_farm_accepts_single_node_worker():
+    sink = Sink()
+    g = pipeline(Gen(5), farm(sink))
+    assert g.lower().run_and_wait_end() == 0
+    assert sorted(sink.got) == [2, 3, 4, 5]
+
+
+def test_seq_pure_override_does_not_alias():
+    g1 = seq(lambda x: x)                    # callables default to pure
+    g2 = seq(g1, pure=False)                 # downgrade must copy, not alias
+    assert g1.root.pure and not g2.root.pure
+    with pytest.raises(GraphError):
+        seq(pipeline(lambda x: x, lambda x: x), pure=True)
+    with pytest.raises(GraphError):
+        seq(Sink(), pure=True)               # not callable: lowering would crash
+
+
+def test_stateful_graphs_are_single_use():
+    g = pipeline(Gen(5), Sink())
+    assert g.lower().run_and_wait_end() == 0
+    with pytest.raises(GraphError):
+        g.lower()                            # stale node state must not rerun
+    # pure graphs re-lower freely
+    p = pipeline(lambda x: x + 1)
+    assert p.lower().run([1]) == [2]
+    assert p.lower().run([2]) == [3]
+
+
+def test_crashed_farm_worker_releases_emitter():
+    # worker 0 dies instantly; round-robin keeps feeding its lane — the dead
+    # node must drain it so the stream completes and the error is reported
+    def boom(t):
+        raise RuntimeError("worker down")
+
+    g = farm([boom, lambda t: t * 2], lb=None)
+    r = g.lower(capacity=4)
+    r.run_then_freeze()
+    for i in range(60):                      # far beyond lane capacity
+        r.offload(i)
+    r.offload(FF_EOS)
+    got = []
+    while True:
+        ok, v = r.load_result(timeout=30)
+        if not ok:
+            break
+        got.append(v)
+    assert r.wait(timeout=30) == -1
+    assert isinstance(r.error(), RuntimeError)
+    assert got == [i * 2 for i in range(1, 60, 2)]   # odd items, worker 1
+
+
+def test_pipeline_batch_run_preserves_order():
+    out = pipeline(lambda x: x + 1, lambda x: x * 10).lower().run([1, 2, 3])
+    assert out == [20, 30, 40]
+
+
+def test_source_pipeline_runs_to_completion():
+    sink = Sink()
+    rc = pipeline(Gen(5), sink).lower().run_and_wait_end()
+    assert rc == 0
+    assert sink.got == [2, 3, 4, 5]
+
+
+# -- optimize(): normal form, semantics preserved -----------------------------
+def test_optimize_flattens_and_preserves_sieve_semantics():
+    def build(optimized):
+        stages = [Sieve() for _ in range(7)]
+        sink = Sink()
+        g = pipeline(Gen(30), pipeline(*stages), sink)
+        if optimized:
+            g = g.optimize()
+        assert g.lower().run_and_wait_end() == 0
+        return sorted(s.f for s in stages), sink.got
+
+    primes_ref, survivors_ref = build(optimized=False)
+    primes_opt, survivors_opt = build(optimized=True)
+    assert primes_opt == primes_ref == [2, 3, 5, 7, 11, 13, 17]
+    assert survivors_opt == survivors_ref == [19, 23, 29]
+
+
+def test_optimize_fuses_adjacent_pure_farms():
+    g = pipeline(farm(lambda x: x * 2, n=3), farm(lambda x: x - 1, n=3))
+    root = g.optimize().root
+    assert isinstance(root, FarmG) and len(root.workers) == 3
+    a = sorted(g.lower().run(range(10)))
+    b = sorted(g.optimize().lower().run(range(10)))
+    assert a == b == sorted(x * 2 - 1 for x in range(10))
+
+
+def test_optimize_collapses_seq_into_farm_collector_and_emitter():
+    g = pipeline(lambda x: x + 1,           # source-position: must survive
+                 farm(lambda x: x * 2, n=2),
+                 lambda x: x + 100)          # collapses into the collector
+    root = g.optimize().root
+    assert isinstance(root, PipeG) and len(root.stages) == 2
+    assert isinstance(root.stages[1], FarmG)
+    assert root.stages[1].collector is not None
+    a = sorted(g.lower().run(range(8)))
+    b = sorted(g.optimize().lower().run(range(8)))
+    assert a == b == sorted((x + 1) * 2 + 100 for x in range(8))
+
+
+def test_optimize_leaves_stateful_farms_alone():
+    g = pipeline(farm([Sieve(), Sieve()]), farm([Sieve(), Sieve()]))
+    root = g.optimize().root
+    assert isinstance(root, PipeG) and len(root.stages) == 2
+
+
+# -- all-to-all ---------------------------------------------------------------
+def test_all_to_all_routes_by_key():
+    seen = [[], [], []]
+
+    class Right(FFNode):
+        def __init__(self, j):
+            super().__init__()
+            self.j = j
+
+        def svc(self, t):
+            seen[self.j].append(t)
+            return t
+
+    g = all_to_all([lambda x: x * 10, lambda x: x * 10],
+                   [Right(j) for j in range(3)],
+                   router=lambda item, n: item % n)
+    out = g.lower().run(range(12))
+    assert sorted(out) == [x * 10 for x in range(12)]
+    for j in range(3):
+        assert seen[j] and all(v % 3 == j for v in seen[j])
+
+
+def test_all_to_all_accelerator_mode():
+    g = all_to_all([lambda x: x + 1], [lambda x: x, lambda x: x])
+    r = g.lower()
+    r.run_then_freeze()
+    for i in range(6):
+        r.offload(i)
+    r.offload(FF_EOS)
+    got = []
+    while True:
+        ok, v = r.load_result()
+        if not ok:
+            break
+        got.append(v)
+    assert r.wait() == 0
+    assert sorted(got) == list(range(1, 7))
+
+
+# -- feedback -----------------------------------------------------------------
+def test_feedback_loop_with_deliver():
+    class Halver(FFNode):
+        """Divide&conquer: halve evens until odd, deliver odd results.
+        Looped items are tagged so in-flight accounting stays exact."""
+
+        def __init__(self):
+            super().__init__()
+            self.inflight = 0
+            self.draining = False
+
+        def svc(self, t):
+            if t == "drain":
+                self.draining = True
+            else:
+                if isinstance(t, tuple):          # back from the feedback edge
+                    self.inflight -= 1
+                    t = t[1]
+                if t % 2 == 0:
+                    self.inflight += 1
+                    return ("loop", t // 2)
+                self.ff_send_out(Deliver(t))
+            if self.draining and self.inflight == 0:
+                return None
+            return GO_ON
+
+    g = pipeline(Halver()).wrap_around()
+    r = g.lower()
+    r.run_then_freeze()
+    for x in (40, 12, 7):
+        r.offload(x)
+    r.offload("drain")
+    got = []
+    while True:
+        ok, v = r.load_result(timeout=10)
+        if not ok:
+            break
+        got.append(v)
+    assert r.wait(timeout=10) == 0
+    assert sorted(got) == [3, 5, 7]
+
+
+def test_voluntary_early_stage_termination_releases_producer():
+    # second stage returns None (=EOS) on its first item: the generator
+    # must not wedge on the full inter-stage queue
+    rc = pipeline(Gen(6000), lambda x: None).lower().run_and_wait_end()
+    assert rc == 0
+
+
+def test_self_terminating_collector_releases_workers():
+    class TwoThenDone(FFNode):
+        def __init__(self):
+            super().__init__()
+            self.n = 0
+
+        def svc(self, t):
+            self.n += 1
+            return FF_EOS if self.n > 2 else t
+
+    g = farm([lambda x: x, lambda x: x], collector=TwoThenDone())
+    r = g.lower(capacity=4)
+    r.run_then_freeze()
+    for i in range(100):
+        r.offload(i)
+    r.offload(FF_EOS)
+    got = []
+    while True:
+        ok, v = r.load_result(timeout=30)
+        if not ok:
+            break
+        got.append(v)
+    assert r.wait(timeout=30) == 0
+    assert len(got) == 2
+
+
+def test_collector_svc_init_failure_reports_error():
+    class BadInit(FFNode):
+        def svc_init(self):
+            return -1
+
+        def svc(self, t):
+            return t
+
+    g = farm([lambda x: x, lambda x: x], collector=BadInit())
+    r = g.lower(capacity=4)
+    r.run_then_freeze()
+    for i in range(100):
+        r.offload(i)
+    r.offload(FF_EOS)
+    while r.load_result(timeout=30)[0]:
+        pass
+    assert r.wait(timeout=30) == -1
+
+
+def test_run_streams_larger_than_all_buffering():
+    # offload and collection must overlap: a long stream + unread results
+    # previously filled every queue and deadlocked
+    out = pipeline(lambda x: x + 1).lower().run(range(10_000))
+    assert out == list(range(1, 10_001))
+
+
+def test_a2a_rejects_composite_workers():
+    with pytest.raises(GraphError):
+        all_to_all([pipeline(lambda x: x + 1, lambda x: x * 2)],
+                   [lambda x: x])
+    with pytest.raises(GraphError):
+        all_to_all([lambda x: x], [farm(lambda x: x, n=2)])
+
+
+def test_a2a_crashed_worker_reports_error():
+    def boom(t):
+        raise RuntimeError("a2a worker down")
+
+    g = all_to_all([lambda x: x], [boom, lambda x: x * 2],
+                   router=lambda item, n: item % n)
+    r = g.lower(capacity=4)
+    r.run_then_freeze()
+    for i in range(60):
+        r.offload(i)
+    r.offload(FF_EOS)
+    got = []
+    while True:
+        ok, v = r.load_result(timeout=30)
+        if not ok:
+            break
+        got.append(v)
+    assert r.wait(timeout=30) == -1
+    assert isinstance(r.error(), RuntimeError)
+    assert got == [i * 2 for i in range(1, 60, 2)]   # surviving worker's lane
+
+
+def test_drainers_exit_after_clean_wait():
+    import threading
+    import time as _time
+
+    class OneShot(FFNode):
+        def svc(self, t):
+            self.ff_send_out(Deliver(t))
+            return None                    # voluntary exit leaves a drainer
+
+    r = pipeline(OneShot()).wrap_around().lower()
+    r.run_then_freeze()
+    r.offload(1)
+    ok, v = r.load_result(timeout=30)
+    assert ok and v == 1
+    assert r.wait(timeout=30) == 0
+    deadline = _time.monotonic() + 5
+    while _time.monotonic() < deadline:
+        if not any(t.name == "ff-drain" and t.is_alive()
+                   for t in threading.enumerate()):
+            break
+        _time.sleep(0.05)
+    else:
+        raise AssertionError("ff-drain thread leaked after clean wait()")
+
+
+def test_run_and_wait_end_discards_unconsumed_output():
+    # sinks that emit more items than any queue capacity must not wedge a
+    # network nobody is draining
+    rc = pipeline(Gen(6000), lambda x: x).lower().run_and_wait_end()
+    assert rc == 0
+
+
+def test_nested_wrapped_subgraph_rejected():
+    inner = pipeline(lambda x: x).wrap_around()
+    with pytest.raises(GraphError):
+        pipeline(lambda x: x, inner)
+
+
+def test_crashed_stage_reports_error_instead_of_hanging():
+    class Boom(FFNode):
+        def svc(self, t):
+            raise RuntimeError("boom")
+
+    r = pipeline(lambda t: t, Boom(), lambda t: t).wrap_around().lower()
+    r.run_then_freeze()
+    r.offload(1)
+    ok, _ = r.load_result(timeout=30)
+    assert not ok
+    assert r.wait(timeout=30) == -1
+    assert isinstance(r.error(), RuntimeError)
+
+
+def test_wait_unwinds_failure_that_races_past_entry():
+    # the stage fails only after wait() has started joining: the polling
+    # unwind (not a one-shot entry check) must still terminate the network
+    import threading
+    gate = threading.Event()
+
+    class SlowBoom(FFNode):
+        def svc(self, t):
+            gate.wait(10)
+            raise RuntimeError("late boom")
+
+    r = pipeline(lambda t: t, SlowBoom(), lambda t: t).wrap_around().lower()
+    r.run_then_freeze()
+    r.offload(1)
+    threading.Timer(0.3, gate.set).start()
+    assert r.wait(timeout=30) == -1
+    assert isinstance(r.error(), RuntimeError)
+
+
+def test_a2a_early_worker_termination_drains():
+    class EarlyStop(FFNode):
+        def __init__(self):
+            super().__init__()
+            self.n = 0
+
+        def svc(self, t):
+            self.n += 1
+            return None if self.n > 2 else t
+
+    g = all_to_all([lambda x: x], [EarlyStop()], router=lambda i, n: 0)
+    r = g.lower(capacity=4)
+    r.run_then_freeze()
+    for i in range(50):
+        r.offload(i)
+    r.offload(FF_EOS)
+    got = []
+    while True:
+        ok, v = r.load_result(timeout=30)
+        if not ok:
+            break
+        got.append(v)
+    assert r.wait(timeout=30) == 0
+    assert got == [0, 1]
+
+
+# -- host vs device lowering parity -------------------------------------------
+def test_host_device_farm_parity(plan):
+    xs = [np.float32(x) for x in range(1, 9)]
+
+    def make():
+        return pipeline(farm(lambda x: x * 2.0, n=2), lambda x: x + 0.5)
+
+    host = sorted(float(v) for v in make().lower().run(xs))
+    dev = sorted(float(v) for v in make().lower(plan).run(xs))
+    opt = sorted(float(v) for v in make().optimize().lower(plan).run(xs))
+    assert host == dev == opt == [x * 2.0 + 0.5 for x in range(1, 9)]
+
+
+def test_host_device_parity_pytree_outputs(plan):
+    def make():
+        return farm(lambda x: (x, x * 2.0), n=2)
+
+    host = sorted((float(a), float(b)) for a, b in make().lower().run([1.0, 2.0, 3.0]))
+    dev = sorted((float(a), float(b)) for a, b in make().lower(plan).run([1.0, 2.0, 3.0]))
+    assert host == dev == [(1.0, 2.0), (2.0, 4.0), (3.0, 6.0)]
+
+
+def test_device_lowering_rejects_heterogeneous_worker_list(plan):
+    # SPMD replicates ONE function; silently lowering workers[0] would
+    # diverge from the host round-robin over distinct workers
+    with pytest.raises(GraphError):
+        farm([lambda x: x + 1, lambda x: x * 2]).lower(plan)
+
+
+def test_device_lowering_rejects_custom_balancer(plan):
+    from repro.core import BroadcastLB
+    with pytest.raises(GraphError):
+        farm(lambda x: x, n=2, lb=BroadcastLB()).lower(plan)
+    with pytest.raises(GraphError):
+        farm(lambda x: x, n=2, ondemand=1).lower(plan)
+
+
+def test_device_lowering_rejects_stateful_stage(plan):
+    with pytest.raises(GraphError):
+        pipeline(Gen(3)).lower(plan)
+
+
+def test_device_lowering_rejects_feedback(plan):
+    with pytest.raises(GraphError):
+        pipeline(lambda x: x).wrap_around().lower(plan)
+
+
+# -- ffmap through lower() -----------------------------------------------------
+def test_ffmap_via_graph_lowering():
+    class Split(FFNode):
+        def svc(self, task):
+            for i, row in enumerate(task):
+                self.ff_send_out(("row", i, row))
+            return None
+
+    class Worker(FFNode):
+        def svc(self, t):
+            _, i, row = t
+            return ("res", i, sum(row))
+
+    class Compose(FFNode):
+        def __init__(self, n, out):
+            super().__init__()
+            self.remaining, self.out = n, out
+
+        def svc(self, t):
+            _, i, s = t
+            self.out[i] = s
+            self.remaining -= 1
+            return GO_ON
+
+    out = {}
+    rows = [[1, 2], [3, 4], [5, 6]]
+    m = ffmap(Split(), [Worker(), Worker()], Compose(len(rows), out)).lower()
+    m.run_then_freeze()
+    m.offload(rows)
+    m.offload(FF_EOS)
+    assert m.wait() == 0
+    assert out == {0: 3, 1: 7, 2: 11}

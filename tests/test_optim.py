@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare interpreter: deterministic cases still run
+    given = settings = st = None
 
 from repro.optim import (Adafactor, AdamW, clip_by_global_norm,
                          ef_compress_grads, int8_compress, int8_decompress)
@@ -53,14 +57,27 @@ def test_clip_by_global_norm():
     assert norm_after == pytest.approx(1.0, rel=1e-4)
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_int8_roundtrip_bounded_error(seed):
+def _check_int8_roundtrip(seed):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.1, 10))
     q, s = int8_compress(x)
     y = int8_decompress(q, s)
     assert float(jnp.max(jnp.abs(y - x))) <= float(s) * 0.5 + 1e-6
+
+
+def test_int8_roundtrip_deterministic():
+    for seed in (0, 1, 7, 1234, 2**31 - 1):
+        _check_int8_roundtrip(seed)
+
+
+if st is not None:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_int8_roundtrip_bounded_error(seed):
+        _check_int8_roundtrip(seed)
+else:
+    def test_int8_roundtrip_bounded_error():
+        pytest.importorskip("hypothesis")
 
 
 def test_error_feedback_preserves_signal():
