@@ -10,8 +10,14 @@ exercised by the dry-run roofline instead (benchmarks/roofline.py).
 
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
+import sys
 import time
 from typing import List
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core import Farm, FFNode, FF_EOS, FnNode, GO_ON, Pipeline
 from repro.core import perf_model as pm
@@ -134,3 +140,93 @@ def bench_accelerator_offload(n=16, t_task=0.01):
     return [("accelerator_offload", overlapped / n * 1e6,
              f"inline={inline:.3f}s overlapped={overlapped:.3f}s "
              f"hide={inline/overlapped:.2f}x")]
+
+
+# --- staged graph compiler: compile latency + hybrid throughput ---------------
+def bench_graph_compile(smoke: bool = False, repeat: int = 20):
+    """Wall time of the four-stage compile pipeline (normalize -> annotate ->
+    place -> emit) for a representative host graph — the cost a consumer
+    pays per fresh runner (threads start later, at run)."""
+    from repro.core import farm, pipeline
+
+    def build():
+        return pipeline(lambda x: x + 1.0,
+                        farm(lambda x: x * 2.0, n=4),
+                        lambda x: x - 3.0)
+
+    n = 5 if smoke else repeat
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        build().compile()
+        best = min(best, time.perf_counter() - t0)
+    return [("graph_compile", best * 1e6, "normalize+annotate+place+emit")]
+
+
+class _GenNode(FFNode):
+    def __init__(self, n):
+        super().__init__()
+        self.i, self.n = 0, n
+
+    def svc(self, _):
+        import numpy as np
+        self.i += 1
+        return np.float32(self.i) if self.i <= self.n else None
+
+
+def bench_hybrid_pipeline(smoke: bool = False):
+    """Throughput of a hybrid plan: a stateful host reader feeding a
+    flops-declared compute farm that place() puts on the mesh behind a
+    device-put boundary node, vs. the same graph pinned all-host."""
+    from repro.core import farm, pipeline
+    from repro.core.plan import single_device_plan
+
+    plan = single_device_plan()
+    n_items = 64 if smoke else 512
+
+    def heavy(x):
+        return x * 2.0 + 1.0
+    heavy.ff_flops = 1e9
+
+    rows = []
+    for mode, label in (("auto", "hybrid"), ("host", "host")):
+        g = pipeline(_GenNode(n_items), farm(heavy, n=2))
+        r = g.compile(plan, mode=mode)
+        t0 = time.perf_counter()
+        out = r.run()
+        dt = time.perf_counter() - t0
+        assert len(out) == n_items
+        targets = "+".join(p.target for _, p in r.placements)
+        rows.append((f"graph_pipeline_{label}", dt / n_items * 1e6,
+                     f"{n_items/dt:.0f}items/s placements={targets}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset for CI; emits the JSON artifact")
+    ap.add_argument("--out", default="BENCH_graph.json",
+                    help="JSON artifact path (graph compile + hybrid "
+                         "pipeline throughput)")
+    args = ap.parse_args()
+
+    benches = [lambda: bench_graph_compile(args.smoke),
+               lambda: bench_hybrid_pipeline(args.smoke)]
+    if not args.smoke:
+        benches += [bench_spsc_queue, bench_farm_speedup,
+                    bench_pipeline_service_time, bench_accelerator_offload]
+    results = {}
+    print("name,us_per_call,derived")
+    for b in benches:
+        for name, us, derived in b():
+            results[name] = {"us_per_call": round(us, 2), "derived": derived}
+            print(f"{name},{us:.1f},{derived}")
+    with open(args.out, "w") as f:
+        json.dump({"bench": "graph", "smoke": args.smoke,
+                   "results": results}, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

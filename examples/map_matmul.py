@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FFNode, GO_ON, farm, ffmap
+from repro.core import FFNode, GO_ON, all_to_all, farm, ffmap
 from repro.core.device import tensor_map
 from repro.core.plan import single_device_plan
 from jax.sharding import PartitionSpec as P
@@ -97,6 +97,23 @@ def main():
                                np.sort(np.asarray(rows_dev), axis=0),
                                rtol=1e-5)
     print("graph farm lower() parity: host threads == mesh shard_map")
+
+    # --- ff_a2a through the staged compiler ---------------------------------
+    # rows are routed to one of two "experts" (scale vs negate) by the sign
+    # of the first transformed element; the device lowering is MoE-style
+    # dispatch/combine (router_topk lane occupancy + capacity-bounded gather)
+    lefts = [lambda row: row @ Bj]
+    rights = [lambda y: y * 2.0, lambda y: -y]
+    router = lambda y, n: jnp.asarray(y[0] > 0, jnp.int32) % n
+
+    def build():
+        return all_to_all(lefts, rights, router=router)
+    out_host = build().compile(mode="host").run(list(jnp.asarray(A)))
+    out_dev = build().compile(plan, mode="device").run(list(A))
+    np.testing.assert_allclose(np.sort(np.asarray(out_host), axis=0),
+                               np.sort(np.asarray(out_dev), axis=0),
+                               rtol=1e-5)
+    print("graph a2a compile() parity: host MPMC grid == MoE dispatch/combine")
 
 
 if __name__ == "__main__":

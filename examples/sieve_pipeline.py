@@ -1,8 +1,10 @@
 """The paper's Sieve of Eratosthenes (FastFlow tutorial Secs. 6-7),
 written against the building-blocks graph API — same structure, same
 semantics: a Generate source, N Sieve stages, a Printer sink, composed with
-``pipeline(...)``, normalised by ``optimize()``, and executed through the
-single ``lower()`` entry point; svc_init/svc_end lifecycle hooks included.
+``pipeline(...)`` and executed through the staged graph compiler
+(``compile()`` = normalize -> annotate -> place -> emit; every stage here is
+stateful, so place() pins the whole network to host threads);
+svc_init/svc_end lifecycle hooks included.
 
     PYTHONPATH=src python examples/sieve_pipeline.py 7 50
 """
@@ -67,7 +69,9 @@ def main():
     streamlen = int(sys.argv[2]) if len(sys.argv) > 2 else 50
     graph = pipeline(Generate(streamlen),
                      *[Sieve() for _ in range(nstages)], Printer())
-    runner = graph.optimize().lower()
+    runner = graph.compile()          # normalize -> annotate -> place -> emit
+    for desc, p in runner.placements:
+        print(f"  [{p.target:6s}] {desc}")
     if runner.run_and_wait_end() < 0:
         raise SystemExit("running pipeline failed")
     print(f"DONE, pipe time = {runner.ffTime():.3f} (ms)")

@@ -1,28 +1,44 @@
 """Core of the framework — FastFlow's layered streaming-network model,
 adapted from shared-memory multicores to TPU pods, unified behind one
-composable *building blocks* graph API.
+composable *building blocks* graph API and one staged graph compiler.
 
 Layer 1-2 (``core.queues``): lock-free SPSC ring buffers, composed into
 SPMC / MPSC / MPMC networks — the channels every host skeleton runs over.
 
 Layer 3 (``core.node``, ``core.skeletons``): the paper-faithful host
 runtime — ``ff_node`` (``svc``/``svc_init``/``svc_end``), ``Pipeline``,
-``Farm`` (emitter / collector / load balancers / on-demand), ``FFMap``,
-``wrap_around`` feedback, and the accelerator mode
+``Farm`` (emitter / collector / load balancers / on-demand / autoscaling),
+``FFMap``, ``wrap_around`` feedback, and the accelerator mode
 (``run_then_freeze`` / ``offload`` / ``load_result`` / ``FF_EOS`` / ``wait``).
 
 Building blocks (``core.graph``): the declarative front door.  Programs are
 written as an ``FFGraph`` of composable blocks — ``seq``, ``pipeline``,
-``farm``, ``ffmap``, ``all_to_all`` (FastFlow 3's ``ff_a2a``), plus
-``wrap_around`` feedback — normalised by ``optimize()`` (pipeline
-flattening, collector-emitter collapse, farm/pipeline fusion) and executed
-through the single polymorphic ``lower(plan)``: ``plan=None`` lowers onto
-host threads over the SPSC networks; a ``ShardingPlan`` lowers pure
-farm/pipeline graphs onto the JAX mesh via ``core.device`` (shard_map farms,
-jit+vmap stages — feedback and all_to_all device lowering are roadmap items;
-use ``core.device.feedback_scan``/``tensor_map`` directly meanwhile).  The
-data pipeline, the serving engine, and the launch entry points are all
-expressed as FFGraph programs.
+``farm`` (including ``n="auto"`` and ``autoscale=True`` widths), ``ffmap``,
+``all_to_all`` (FastFlow 3's ``ff_a2a``), plus ``wrap_around`` feedback.
+
+The staged compiler (``core.compiler``): ``FFGraph.compile(plan)`` runs four
+explicit stages —
+
+1. **normalize**: the ``optimize()`` normal-form rewrites (pipeline
+   flattening, collector-emitter collapse, farm/pipeline fusion);
+2. **annotate**: a ``CostEstimate`` per node from the paper's Sec. 13
+   algebra in ``core.perf_model`` (declared ``ff_cost``/``ff_flops``,
+   explicit ``costs=``, or timing the node on a ``sample`` item);
+3. **place**: a ``Placement`` per top-level stage — host thread vs. device,
+   farm width from ``choose_farm_width``, overridable per node;
+4. **emit**: ``HostRunner`` (threads over SPSC queues), ``DeviceRunner``
+   (the mesh via ``core.device``), or the *hybrid* runner — host stages over
+   SPSC queues feeding device segments through device-put boundary nodes.
+
+``emit`` covers every block on both targets: farms are ``shard_map`` over
+the data axis, ``all_to_all`` lowers to MoE-style dispatch/combine
+(``core.device.a2a_dispatch``, reusing the ``router_topk`` kernel and
+``expert_capacity``), and ``wrap_around`` lowers through
+``core.device.feedback_scan`` when ``compile(feedback_steps=K)`` bounds the
+loop.  ``lower(plan)`` stays as a thin compat wrapper forcing all-host
+(``plan=None``) or all-device placement.  The data pipeline, the serving
+engine, and the launch entry points are all expressed as FFGraph programs
+compiled through this pipeline.
 
 Device side: ``core.plan`` maps logical tensor axes onto mesh axes,
 ``core.device`` holds the mesh lowerings, ``core.accelerator`` treats a
@@ -32,11 +48,14 @@ paper's Sec. 13 cost model with a TPU roofline.
 
 from .node import EOS, GO_ON, FFNode, FnNode
 from .queues import MPMCQueue, MPSCQueue, QueueClosed, SPMCQueue, SPSCQueue
-from .skeletons import (BroadcastLB, Farm, FF_EOS, FFMap, LoadBalancer,
-                        OnDemandLB, Pipeline, RoundRobinLB, Skeleton)
+from .skeletons import (AutoscaleLB, BroadcastLB, Farm, FF_EOS, FFMap,
+                        LoadBalancer, OnDemandLB, Pipeline, RoundRobinLB,
+                        Skeleton)
 from .graph import (A2ASkeleton, Deliver, FFGraph, GraphError, Runner,
                     all_to_all, farm, ffmap, pipeline, seq)
 from .graph import HostRunner, DeviceRunner
+from .compiler import (CostEstimate, HybridRunner, Placement, annotate,
+                       compile_graph, emit, place)
 from .accelerator import JaxAccelerator
 from .plan import DEFAULT_RULES, ShardingPlan, single_device_plan
 from . import device, perf_model
@@ -46,9 +65,12 @@ __all__ = [
     "SPSCQueue", "SPMCQueue", "MPSCQueue", "MPMCQueue", "QueueClosed",
     "Pipeline", "Farm", "FFMap", "Skeleton",
     "LoadBalancer", "RoundRobinLB", "OnDemandLB", "BroadcastLB",
+    "AutoscaleLB",
     "FFGraph", "GraphError", "Deliver", "Runner", "HostRunner",
-    "DeviceRunner", "A2ASkeleton",
+    "DeviceRunner", "HybridRunner", "A2ASkeleton",
     "seq", "pipeline", "farm", "ffmap", "all_to_all",
+    "CostEstimate", "Placement", "annotate", "place", "emit",
+    "compile_graph",
     "JaxAccelerator", "ShardingPlan", "single_device_plan", "DEFAULT_RULES",
     "device", "perf_model",
 ]

@@ -1,0 +1,580 @@
+"""The staged graph compiler: ``normalize -> annotate -> place -> emit``.
+
+``FFGraph.lower(plan)`` used to be an all-or-nothing switch — the whole graph
+on host threads or the whole graph on the JAX mesh.  This module turns
+lowering into an explicit compile pipeline, the way the FastFlow runtime
+layers arbitrary networks over its core channels:
+
+1. **normalize** — the :meth:`FFGraph.optimize` normal-form rewrites
+   (pipeline flattening, collector–emitter collapse, farm/pipeline fusion);
+2. **annotate** — attach a :class:`CostEstimate` to every IR node from the
+   paper's Sec. 13 algebra in ``core/perf_model.py``: per-item host time from
+   ``costs=``, ``ff_cost``/``ff_flops``/``ff_bytes`` attributes on the
+   worker, or by timing the node on a ``sample`` item; device time from the
+   TPU roofline when FLOPs are declared;
+3. **place** — assign each top-level stage a :class:`Placement` (host thread
+   vs. device) by comparing the host farm service time against the roofline
+   estimate, choose host farm widths with
+   :func:`~repro.core.perf_model.choose_farm_width`, honor per-node
+   overrides;
+4. **emit** — build the runner: all-host -> :class:`~repro.core.graph.
+   HostRunner`; all-device -> :class:`~repro.core.graph.DeviceRunner`; mixed
+   -> :class:`HybridRunner`, host stages over SPSC queues feeding device
+   segments on the mesh through device-put boundary nodes
+   (:class:`_DeviceStageNode` stacks a microbatch, ``device_put``s it with
+   the data-axis sharding, runs the jitted segment, and streams the
+   unstacked results downstream).
+
+``emit`` also closes the two device lowerings the monolithic ``lower()``
+lacked: ``all_to_all`` becomes MoE-style dispatch/combine
+(``core.device.a2a_dispatch``, reusing ``kernels/router_topk.py`` +
+``expert_capacity``), and ``wrap_around`` lowers through
+``core.device.feedback_scan`` when ``feedback_steps`` is given.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from . import perf_model as pm
+from .graph import (A2AG, DeviceRunner, FarmG, FFGraph, GraphError,
+                    HostRunner, MapG, PipeG, SeqG, _device_fn, _is_pure_seq)
+from .node import GO_ON, FFNode
+
+# Cost-model constants: a host core's useful peak (for flops-declared nodes
+# with no measured time), the SPSC channel's own service time (the farm
+# width floor), and the per-microbatch host<->device boundary cost.
+HOST_PEAK_FLOPS = 5e10
+HOST_QUEUE_OVERHEAD_S = 2e-5
+DEVICE_DISPATCH_S = 2e-5
+DEFAULT_T_TASK_S = 5e-5
+
+
+@dataclasses.dataclass
+class CostEstimate:
+    """Per-node cost, in host-seconds per item plus declared work terms."""
+
+    t_task: float = DEFAULT_T_TASK_S
+    flops: float = 0.0
+    bytes: float = 0.0
+    source: str = "default"     # default | declared | given | measured | derived
+
+    def host_time(self, width: int = 1) -> float:
+        """Per-item service time on a ``width``-worker host farm."""
+        return self.t_task / max(1, width)
+
+    def device_time(self, n_chips: int = 1) -> Optional[float]:
+        """Roofline per-item time on the mesh, or None when no work terms
+        are declared (an unmeasurable node never wins a device slot)."""
+        if self.flops <= 0:
+            return None
+        terms = pm.roofline(self.flops, self.bytes, 0.0, max(1, n_chips))
+        return terms.step_time_s + DEVICE_DISPATCH_S
+
+
+@dataclasses.dataclass
+class Placement:
+    """Where one top-level stage runs.  ``width`` is the host farm worker
+    count (or the mesh axis size for device farms); ``reason`` records the
+    cost-model comparison for reports/tests."""
+
+    target: str = "host"        # "host" | "device"
+    width: Optional[int] = None
+    reason: str = ""
+
+
+def _as_placement(v: Any) -> Placement:
+    if isinstance(v, Placement):
+        if v.target not in ("host", "device"):
+            raise GraphError(f"Placement target must be 'host' or 'device' "
+                             f"(got {v.target!r})")
+        return v
+    if v in ("host", "device"):
+        return Placement(target=v, reason="override")
+    raise GraphError(f"placement override must be 'host', 'device', or a "
+                     f"Placement (got {v!r})")
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: annotate
+# ---------------------------------------------------------------------------
+def _measure(fn: Callable, sample: Any, repeat: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(sample)
+        best = min(best, time.perf_counter() - t0)
+    return max(best, 1e-9)
+
+
+def _estimate(key: Any, costs: Dict, sample: Any) -> CostEstimate:
+    """Cost for one worker object: explicit ``costs=`` entry > declared
+    ``ff_cost``/``ff_flops`` attributes > timing on ``sample`` > default."""
+    if key is not None:
+        try:
+            given = costs.get(key)
+        except TypeError:           # unhashable worker object
+            given = None
+        if given is not None:
+            if isinstance(given, CostEstimate):
+                return given
+            return CostEstimate(t_task=float(given), source="given")
+        fl = float(getattr(key, "ff_flops", 0.0) or 0.0)
+        by = float(getattr(key, "ff_bytes", 0.0) or 0.0)
+        t = getattr(key, "ff_cost", None)
+        if t is not None:
+            return CostEstimate(float(t), fl, by, "declared")
+        if fl > 0.0:
+            return CostEstimate(fl / HOST_PEAK_FLOPS, fl, by, "declared")
+        if sample is not None and callable(key):
+            try:
+                return CostEstimate(_measure(key, sample), source="measured")
+            except Exception:       # noqa: BLE001 - sample may not fit the fn
+                pass
+    return CostEstimate()
+
+
+def annotate(graph: FFGraph, costs: Optional[Dict] = None,
+             sample: Any = None) -> FFGraph:
+    """Attach a :class:`CostEstimate` to every IR node (in place).
+
+    Leaf costs come from :func:`_estimate`; composites follow the paper's
+    algebra — a pipeline worker's per-item time is the sum of its stages, a
+    farm node carries its *worker's* per-item time (the farm service time is
+    width-dependent and belongs to ``place``)."""
+    costs = costs or {}
+    memo: Dict[int, CostEstimate] = {}    # replicated workers share one fn
+
+    def est(key: Any, smp: Any) -> CostEstimate:
+        k = id(key)
+        if k not in memo:
+            memo[k] = _estimate(key, costs, smp)
+        return memo[k]
+
+    def visit(n: Any) -> CostEstimate:
+        if isinstance(n, SeqG):
+            n.cost = est(n.node, sample if n.pure else None)
+        elif isinstance(n, PipeG):
+            subs = [visit(s) for s in n.stages]
+            n.cost = CostEstimate(t_task=sum(c.t_task for c in subs),
+                                  flops=sum(c.flops for c in subs),
+                                  bytes=sum(c.bytes for c in subs),
+                                  source="derived")
+        elif isinstance(n, FarmG):
+            subs = [visit(w) for w in n.workers]
+            key = n.fn if n.fn is not None else None
+            c = est(key, sample) if key is not None else subs[0]
+            if c.source == "default" and subs[0].source != "default":
+                c = subs[0]
+            for part in (n.emitter, n.collector):
+                if part is not None:
+                    visit(part)
+            n.cost = c
+        elif isinstance(n, A2AG):
+            ls = [visit(x) for x in n.left]
+            rs = [visit(x) for x in n.right]
+            n.cost = CostEstimate(
+                t_task=(sum(c.t_task for c in ls) / len(ls)
+                        + sum(c.t_task for c in rs) / len(rs)),
+                flops=sum(c.flops for c in (*ls, *rs)),
+                bytes=sum(c.bytes for c in (*ls, *rs)),
+                source="derived")
+        elif isinstance(n, MapG):
+            for x in (n.splitter, *n.workers, n.composer):
+                visit(x)
+            n.cost = CostEstimate(source="default")
+        else:
+            return CostEstimate()
+        return n.cost
+
+    visit(graph.root)
+    return graph
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: place
+# ---------------------------------------------------------------------------
+def _top_stages(graph: FFGraph) -> List[Any]:
+    return list(graph.root.stages) if isinstance(graph.root, PipeG) \
+        else [graph.root]
+
+
+def _device_eligible(n: Any) -> bool:
+    """Can this stage lower onto the mesh at all?"""
+    if isinstance(n, A2AG):
+        return all(_is_pure_seq(x) for x in (*n.left, *n.right))
+    try:
+        _device_fn(n)
+        return True
+    except GraphError:
+        return False
+
+
+def _mesh_axis_size(plan: Any, axis: str) -> int:
+    return int(dict(plan.mesh.shape).get(axis, 1))
+
+
+def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
+          axis: str = "data", feedback_steps: Optional[int] = None,
+          mode: str = "auto") -> FFGraph:
+    """Assign each top-level stage a :class:`Placement` (in place).
+
+    A stage goes to the device when it *can* lower there, a plan was given,
+    and the roofline estimate beats the best host farm service time; host
+    farm widths come from :func:`~repro.core.perf_model.choose_farm_width`.
+    ``overrides`` maps a stage index or worker object (the callable/FFNode
+    the stage was built from) to a :class:`Placement` (or
+    ``"host"``/``"device"``).  A ``wrap_around``
+    graph places on the device only as a whole (every stage eligible) and
+    only when ``feedback_steps`` says how many synchronous turns to run."""
+    overrides = overrides or {}
+    stages = _top_stages(graph)
+    n_cpu = max(1, os.cpu_count() or 1)
+    n_chips = _mesh_axis_size(plan, axis) if plan is not None else 1
+
+    def override_for(i: int, s: Any) -> Optional[Placement]:
+        # keys are stage indices or the hashable user objects a stage wraps
+        # (IR dataclasses themselves are mutable and unhashable)
+        for key in (i, getattr(s, "node", None), getattr(s, "fn", None)):
+            if key is None:
+                continue
+            try:
+                if key in overrides:
+                    return _as_placement(overrides[key])
+            except TypeError:
+                continue
+        return None
+
+    # a feedback graph runs its loop through one target: device only when
+    # the whole graph lowers there and a turn count was given
+    wrap_device_ok = (graph._wrap and plan is not None
+                      and feedback_steps is not None
+                      and not any(isinstance(s, A2AG) for s in stages)
+                      and all(_device_eligible(s) for s in stages))
+
+    for i, s in enumerate(stages):
+        ov = override_for(i, s)
+        c = s.cost if isinstance(s.cost, CostEstimate) else CostEstimate()
+        if isinstance(s, FarmG) and not s.autoscale:
+            t_emit = getattr(getattr(s.emitter, "cost", None), "t_task", 0.0)
+            t_coll = getattr(getattr(s.collector, "cost", None), "t_task", 0.0)
+            host_width = (len(s.workers) if not s.n_auto else
+                          pm.choose_farm_width(c.t_task, n_cpu,
+                                               t_emit=t_emit,
+                                               t_collect=t_coll,
+                                               overhead=HOST_QUEUE_OVERHEAD_S))
+        elif isinstance(s, FarmG):
+            host_width = len(s.workers) if not s.n_auto else n_cpu
+        else:
+            host_width = 1
+        if ov is not None:
+            if ov.width is None:
+                ov = dataclasses.replace(
+                    ov, width=n_chips if ov.target == "device" else host_width)
+            s.placement = ov
+            continue
+        if mode == "host" or plan is None:
+            s.placement = Placement("host", host_width, "forced host"
+                                    if mode == "host" else "no plan")
+            continue
+        if mode == "device":
+            s.placement = Placement("device", n_chips, "forced device")
+            continue
+        if graph._wrap:
+            target = "device" if wrap_device_ok else "host"
+            s.placement = Placement(
+                target, n_chips if target == "device" else host_width,
+                "feedback loop lowers as one unit")
+            continue
+        if isinstance(s, FarmG) and s.autoscale:
+            # autoscale is a host-runtime request (grow/shrink threads from
+            # lane depth); a device farm has no lanes to observe — honor the
+            # flag unless an explicit override forces the device
+            s.placement = Placement("host", host_width,
+                                    "autoscale requested (host runtime)")
+            continue
+        if not _device_eligible(s):
+            s.placement = Placement("host", host_width, "stateful/host-only")
+            continue
+        dev_t = c.device_time(n_chips)
+        host_t = c.host_time(host_width)
+        if dev_t is not None and dev_t < host_t:
+            s.placement = Placement(
+                "device", n_chips,
+                f"roofline {dev_t*1e6:.1f}us < host {host_t*1e6:.1f}us")
+        else:
+            s.placement = Placement(
+                "host", host_width,
+                "no declared FLOPs" if dev_t is None else
+                f"host {host_t*1e6:.1f}us <= roofline {dev_t*1e6:.1f}us")
+    return graph
+
+
+# ---------------------------------------------------------------------------
+# Stage 4: emit
+# ---------------------------------------------------------------------------
+def make_device_batched(graph: FFGraph, plan: Any, axis: str = "data",
+                        feedback_steps: Optional[int] = None,
+                        a2a_capacity_factor: Optional[float] = None,
+                        ) -> Tuple[Callable, int]:
+    """Build the batch-level device function for a graph (or subgraph).
+
+    Returns ``(batched(xs, offset), axis_multiple)``: ``xs`` is the stacked
+    batch, ``offset`` the absolute stream index of its first item (position
+    matters to ``all_to_all`` routing parity with the host feeder), and the
+    batch length must be a multiple of ``axis_multiple`` (callers pad).
+
+    ``a2a_capacity_factor`` bounds the all_to_all expert lanes via
+    ``expert_capacity`` (over-capacity items are dropped); the default
+    ``None`` is lossless — every lane sized to the batch, matching the host
+    semantics at the price of nR-fold redundant expert compute."""
+    import jax
+    import jax.numpy as jnp
+    from . import device as dev
+
+    if plan is None:
+        raise GraphError("device lowering needs a ShardingPlan (compile "
+                         "mode/override asked for the device with plan=None)")
+    mesh_axis = _mesh_axis_size(plan, axis)
+
+    if graph._wrap:
+        if feedback_steps is None:
+            raise GraphError(
+                "device feedback needs a turn count: pass feedback_steps=K "
+                "to compile() (lowers through core.device.feedback_scan), "
+                "or use the host path / feedback_scan directly")
+        fn, uses_farm = _device_fn(graph.root)
+
+        def item_fn(x):
+            final, _ = dev.feedback_scan(lambda s: (fn(s), 0.0), x,
+                                         feedback_steps, collect=False)
+            return final
+
+        if uses_farm:
+            inner = dev.farm_map(lambda xs: jax.vmap(item_fn)(xs),
+                                 plan.mesh, axis=axis)
+            return (lambda xs, offset: inner(xs)), mesh_axis
+        inner = jax.vmap(item_fn)
+        return (lambda xs, offset: inner(xs)), 1
+
+    stages = _top_stages(graph)
+    parts: List[Tuple[str, Callable]] = []    # ("map", f(xs)) | ("a2a", f(xs, t))
+    mult = 1
+    seg: List[Any] = []
+
+    def close_seg() -> None:
+        nonlocal mult
+        if not seg:
+            return
+        sub = seg[0] if len(seg) == 1 else PipeG(list(seg))
+        fn, uses_farm = _device_fn(sub)
+        if uses_farm:
+            parts.append(("map", dev.farm_map(
+                lambda xs, _f=fn: jax.vmap(_f)(xs), plan.mesh, axis=axis)))
+            mult = max(mult, mesh_axis)
+        else:
+            parts.append(("map", jax.vmap(fn)))
+        seg.clear()
+
+    for s in stages:
+        if isinstance(s, A2AG):
+            if not all(_is_pure_seq(x) for x in (*s.left, *s.right)):
+                raise GraphError("device all_to_all lowering needs pure "
+                                 "(callable) left/right workers")
+            close_seg()
+            parts.append(("a2a", dev.a2a_dispatch(
+                [x.node for x in s.left], [x.node for x in s.right],
+                router=s.router,
+                mesh=plan.mesh if mesh_axis > 1 else None, axis=axis,
+                capacity_factor=a2a_capacity_factor)))
+            mult = max(mult, mesh_axis)
+        else:
+            seg.append(s)
+    close_seg()
+
+    def batched(xs, offset):
+        # items may be pytrees (e.g. dict batches); a2a stages need arrays
+        t_idx = offset + jnp.arange(jax.tree.leaves(xs)[0].shape[0])
+        for kind, f in parts:
+            xs = f(xs) if kind == "map" else f(xs, t_idx)
+        return xs
+
+    return batched, mult
+
+
+class _DeviceStageNode(FFNode):
+    """The device-put boundary node: one host pipeline stage that stacks a
+    microbatch, moves it onto the mesh with the data-axis sharding, runs the
+    jitted device segment, and streams the unstacked results downstream.
+    The SPSC queues around it are exactly FastFlow's bounded lanes — the
+    device never waits on the host unless the host truly falls behind."""
+
+    def __init__(self, batched: Callable, axis_mult: int, device_batch: int,
+                 sharding: Any = None, label: str = "device"):
+        super().__init__()
+        import jax
+        self._batched = jax.jit(batched)
+        self._mult = max(1, axis_mult)
+        self._B = max(int(device_batch), self._mult)
+        self._sharding = sharding
+        self._label = label
+        self._buf: List[Any] = []
+        self._off = 0
+
+    def svc(self, item: Any) -> Any:
+        self._buf.append(item)
+        if len(self._buf) >= self._B:
+            self._flush()
+        return GO_ON
+
+    def svc_end(self) -> None:
+        if self._buf:
+            try:
+                self._flush()       # the final partial microbatch
+            except BaseException as e:   # noqa: BLE001
+                self.error = e      # svc_end runs outside the svc try-block
+                raise
+
+    def _flush(self) -> None:
+        import jax
+        import jax.numpy as jnp
+        items = [jax.tree.map(jnp.asarray, x) for x in self._buf]
+        self._buf = []
+        n = len(items)
+        pad = (-n) % self._mult
+        items = items + items[:1] * pad
+        xs = jax.tree.map(lambda *ts: jnp.stack(ts), *items)
+        if self._sharding is not None:
+            xs = jax.device_put(xs, self._sharding)
+        ys = jax.block_until_ready(self._batched(xs, jnp.int32(self._off)))
+        self._off += n
+        for i in range(n):
+            self.ff_send_out(jax.tree.map(lambda t: t[i], ys))
+
+
+class HybridRunner(HostRunner):
+    """A mixed-placement graph: host stages over SPSC queues feeding device
+    segments through :class:`_DeviceStageNode` boundary nodes.  Same surface
+    as :class:`HostRunner`; ``placements`` records the compiler's per-stage
+    decisions."""
+
+    placements: List[Tuple[str, Placement]] = []
+
+    def describe_placements(self) -> str:
+        return "\n".join(f"  [{p.target:6s}] {desc}"
+                         + (f" width={p.width}" if p.width else "")
+                         + (f"  # {p.reason}" if p.reason else "")
+                         for desc, p in self.placements)
+
+
+def _materialize_widths(n: Any) -> None:
+    """Host-side auto farms get their cost-chosen width before building."""
+    if isinstance(n, PipeG):
+        for s in n.stages:
+            _materialize_widths(s)
+    elif isinstance(n, FarmG):
+        if (n.n_auto and not n.autoscale and n.fn is not None
+                and getattr(n.placement, "width", None)):
+            n.workers = [SeqG(n.fn, pure=True)
+                         for _ in range(max(1, n.placement.width))]
+        for w in n.workers:
+            _materialize_widths(w)
+
+
+def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
+         results_capacity: int = 4096, axis: str = "data",
+         feedback_steps: Optional[int] = None,
+         device_batch: Optional[int] = None,
+         a2a_capacity_factor: Optional[float] = None) -> Any:
+    """Build the runner for a placed graph (stage 4)."""
+    stages = _top_stages(graph)
+    placements = [s.placement if isinstance(s.placement, Placement)
+                  else Placement("host") for s in stages]
+    report = list(zip([s.describe() for s in stages], placements))
+    targets = {p.target for p in placements}
+
+    if targets == {"device"}:
+        runner = DeviceRunner(graph, plan, axis=axis,
+                              feedback_steps=feedback_steps,
+                              a2a_capacity_factor=a2a_capacity_factor)
+    elif targets == {"host"}:
+        _materialize_widths(graph.root)
+        runner = HostRunner(graph, capacity=capacity,
+                            results_capacity=results_capacity)
+    else:
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh_axis = _mesh_axis_size(plan, axis)
+        # in a feedback loop items circulate one at a time: a buffering
+        # boundary node would starve the loop waiting for a full microbatch
+        if device_batch is None:
+            device_batch = 1 if graph._wrap else 8 * mesh_axis
+        new_stages: List[Any] = []
+        run: List[Any] = []
+
+        def close_run() -> None:
+            if not run:
+                return
+            sub = FFGraph(run[0] if len(run) == 1 else PipeG(list(run)))
+            batched, mult = make_device_batched(
+                sub, plan, axis=axis,
+                a2a_capacity_factor=a2a_capacity_factor)
+            sharding = (NamedSharding(plan.mesh, P(axis))
+                        if mult > 1 else None)
+            new_stages.append(SeqG(
+                _DeviceStageNode(batched, mult, device_batch,
+                                 sharding=sharding,
+                                 label=sub.root.describe())))
+            run.clear()
+
+        for s, p in zip(stages, placements):
+            if p.target == "device":
+                run.append(s)
+            else:
+                close_run()
+                new_stages.append(s)
+        close_run()
+        _materialize_widths(PipeG(new_stages))
+        hg = FFGraph(new_stages[0] if len(new_stages) == 1
+                     else PipeG(new_stages))
+        hg._wrap = graph._wrap
+        runner = HybridRunner(hg, capacity=capacity,
+                              results_capacity=results_capacity)
+    runner.placements = report
+    return runner
+
+
+# ---------------------------------------------------------------------------
+# The pipeline driver
+# ---------------------------------------------------------------------------
+def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
+                  normalize: bool = True, costs: Optional[Dict] = None,
+                  sample: Any = None, placements: Optional[Dict] = None,
+                  capacity: int = 512, results_capacity: int = 4096,
+                  axis: str = "data", feedback_steps: Optional[int] = None,
+                  device_batch: Optional[int] = None,
+                  a2a_capacity_factor: Optional[float] = None) -> Any:
+    """Run the staged pipeline: normalize -> annotate -> place -> emit.
+
+    Note: stage-index keys in ``placements=`` refer to the *normalized*
+    graph's top-level stages (normalize may collapse/fuse stages); worker
+    objects (the callables/FFNodes stages were built from) survive the
+    rewrites and are the stabler key."""
+    if mode not in ("auto", "host", "device"):
+        raise GraphError(f"unknown compile mode {mode!r}")
+    if mode == "device" and plan is None:
+        raise GraphError("compile(mode=\"device\") needs a ShardingPlan")
+    g = graph.optimize() if normalize else graph
+    # forced modes still need costs for width selection (n="auto" farms),
+    # so annotate runs whenever the caller supplied cost information
+    if mode == "auto" or costs or sample is not None:
+        annotate(g, costs=costs, sample=sample)
+    place(g, plan, overrides=placements, axis=axis,
+          feedback_steps=feedback_steps, mode=mode)
+    return emit(g, plan, capacity=capacity,
+                results_capacity=results_capacity, axis=axis,
+                feedback_steps=feedback_steps, device_batch=device_batch,
+                a2a_capacity_factor=a2a_capacity_factor)

@@ -186,6 +186,79 @@ def feedback_scan(step_fn: Callable, init_state, n_steps: int,
 
 
 # ---------------------------------------------------------------------------
+# all-to-all (ff_a2a) as MoE-style dispatch/combine
+# ---------------------------------------------------------------------------
+def a2a_dispatch(left_fns: Sequence[Callable], right_fns: Sequence[Callable],
+                 router: Optional[Callable] = None, mesh: Optional[Mesh] = None,
+                 axis: str = "data", capacity_factor: Optional[float] = None,
+                 interpret: Optional[bool] = None):
+    """Device lowering of ``ff_a2a``: left workers map the batch, then items
+    are dispatched to router-selected right workers ("experts") through
+    capacity-bounded lanes and combined back in stream order — the same
+    dispatch/combine structure as the MoE farm, reusing the
+    ``kernels/router_topk.py`` lane-occupancy kernel (top-1) and
+    :func:`expert_capacity`.
+
+    Semantics mirror the host :class:`~repro.core.graph.A2ASkeleton`: item
+    ``t`` enters left worker ``t % nL`` (the feeder's round-robin); without a
+    ``router`` the default schedule matches the host's per-producer staggered
+    round-robin ``(i + k) % nR``.  A ``router(item, n_right) -> int`` must be
+    jax-traceable here (the host runtime accepts any Python callable).
+
+    ``capacity_factor=None`` sizes every lane to the whole batch (lossless —
+    the host runtime never drops, it blocks); with a factor, lanes are sized
+    by :func:`expert_capacity` and items beyond capacity produce zeros, the
+    bounded-lane drop policy of the synchronous SPMD rendering.
+
+    Returns ``batched(xs, t_idx)`` mapping a stacked batch ``(T, ...)`` plus
+    absolute stream indices ``(T,)`` to stacked outputs ``(T, ...)``; right
+    workers must agree on output shape/dtype.  With a ``mesh``, the left map
+    runs sharded over ``axis`` (the dispatch itself is batch-global).
+    """
+    from ..kernels.router_topk import router_topk
+
+    if interpret is None:   # real Mosaic kernel on TPU, Python body elsewhere
+        interpret = jax.default_backend() != "tpu"
+    nL, nR = len(left_fns), len(right_fns)
+
+    def left_apply(x, t):
+        if nL == 1:
+            return left_fns[0](x)
+        return lax.switch(t % nL, list(left_fns), x)
+
+    def batched(xs, t_idx):
+        T = xs.shape[0]
+        axis_size = dict(mesh.shape).get(axis, 1) if mesh is not None else 1
+        if axis_size > 1 and T % axis_size == 0:
+            ys = farm_map(lambda a, b: jax.vmap(left_apply)(a, b), mesh,
+                          axis=axis, in_specs=(P(axis), P(axis)),
+                          out_specs=P(axis))(xs, t_idx)
+        else:
+            ys = jax.vmap(left_apply)(xs, t_idx)
+        if router is not None:
+            e = jax.vmap(lambda y: router(y, nR))(ys)
+            e = jnp.asarray(e, jnp.int32) % nR
+        else:  # host default: producer i's k-th output goes to (i + k) % nR
+            e = (((t_idx % nL) + (t_idx // nL)) % nR).astype(jnp.int32)
+        cap = T if capacity_factor is None else \
+            expert_capacity(T, nR, 1, capacity_factor)
+        logits = jax.nn.one_hot(e, nR, dtype=jnp.float32)
+        _w, idx, pos, keep = router_topk(logits, 1, cap, block_t=T,
+                                         interpret=interpret)
+        idx0, pos0, keep0 = idx[:, 0], pos[:, 0], keep[:, 0]
+        # scatter into (nR, cap) lanes; over-capacity items go to a dump slot
+        dest = jnp.where(keep0, idx0 * cap + pos0, nR * cap)
+        flat = jnp.zeros((nR * cap + 1,) + ys.shape[1:], ys.dtype).at[dest].set(ys)
+        lanes = flat[:nR * cap].reshape((nR, cap) + ys.shape[1:])
+        outs = jnp.stack([jax.vmap(right_fns[j])(lanes[j]) for j in range(nR)])
+        out = outs[idx0, pos0]                       # combine in stream order
+        mask = keep0.reshape((T,) + (1,) * (out.ndim - 1))
+        return jnp.where(mask, out, jnp.zeros_like(out))
+
+    return batched
+
+
+# ---------------------------------------------------------------------------
 # MoE farm helpers (emitter = learned load balancer)
 # ---------------------------------------------------------------------------
 def expert_capacity(tokens_per_shard: int, n_experts: int, top_k: int,

@@ -29,6 +29,7 @@ examples) programs against.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 import traceback
@@ -36,8 +37,8 @@ from typing import Any, Callable, List, Optional, Sequence
 
 from .node import EOS, GO_ON, FFNode, FnNode, spawn_drainer
 from .queues import MPMCQueue, MPSCQueue, SPMCQueue, SPSCQueue
-from .skeletons import (Farm, FFMap, LoadBalancer, Pipeline, Skeleton,
-                        _CollectorRunner)
+from .skeletons import (AutoscaleLB, Farm, FFMap, LoadBalancer, Pipeline,
+                        Skeleton, _CollectorRunner)
 
 
 class GraphError(Exception):
@@ -62,9 +63,14 @@ class Deliver:
 class SeqG:
     """A sequential building block: an FFNode/Skeleton instance, or a plain
     callable (``pure=True`` — assumed a stateless 1->1 map, which licenses
-    the optimizer to move/compose it and the device path to jit it)."""
+    the optimizer to move/compose it and the device path to jit it).
+
+    ``cost``/``placement`` are filled in by the staged compiler's
+    ``annotate``/``place`` passes (core/compiler.py) — None until compiled."""
     node: Any
     pure: bool = False
+    cost: Any = None
+    placement: Any = None
 
     def describe(self) -> str:
         name = self.node.__name__ if self.pure and hasattr(self.node, "__name__") \
@@ -75,6 +81,8 @@ class SeqG:
 @dataclasses.dataclass
 class PipeG:
     stages: List[Any]
+    cost: Any = None
+    placement: Any = None
 
     def describe(self) -> str:
         return "pipe(" + " -> ".join(s.describe() for s in self.stages) + ")"
@@ -88,9 +96,14 @@ class FarmG:
     lb: Optional[LoadBalancer] = None
     ondemand: Optional[int] = None
     fn: Optional[Callable] = None    # set when built from one replicated pure fn
+    n_auto: bool = False             # width left to the compiler's cost model
+    autoscale: bool = False          # host workers grow/shrink from queue depth
+    cost: Any = None
+    placement: Any = None
 
     def describe(self) -> str:
-        bits = [f"farm[{len(self.workers)}]({self.workers[0].describe()})"]
+        width = "auto" if self.n_auto else str(len(self.workers))
+        bits = [f"farm[{width}]({self.workers[0].describe()})"]
         if self.emitter is not None:
             bits.insert(0, f"E:{self.emitter.describe()}")
         if self.collector is not None:
@@ -103,6 +116,8 @@ class MapG:
     splitter: Any
     workers: List[Any]
     composer: Any
+    cost: Any = None
+    placement: Any = None
 
     def describe(self) -> str:
         return f"map[{len(self.workers)}]({self.workers[0].describe()})"
@@ -115,6 +130,8 @@ class A2AG:
     left: List[Any]
     right: List[Any]
     router: Optional[Callable[[Any, int], int]] = None
+    cost: Any = None
+    placement: Any = None
 
     def describe(self) -> str:
         return f"a2a[{len(self.left)}x{len(self.right)}]"
@@ -162,12 +179,22 @@ def pipeline(*stages: Any) -> "FFGraph":
     return FFGraph(PipeG([_to_g(s) for s in stages]))
 
 
-def farm(workers: Any, n: Optional[int] = None, *, emitter: Any = None,
+def farm(workers: Any, n: Any = None, *, emitter: Any = None,
          collector: Any = None, lb: Optional[LoadBalancer] = None,
-         ondemand: Optional[int] = None) -> "FFGraph":
+         ondemand: Optional[int] = None, autoscale: bool = False) -> "FFGraph":
     """``farm(fn, n)`` replicates a pure worker; ``farm([w0, w1, ...])``
-    takes explicit (possibly stateful) workers."""
+    takes explicit (possibly stateful) workers.
+
+    ``n="auto"`` leaves the width to the compiler's cost model (``place``
+    picks it from the annotated per-item time, ``Placement(width=...)``
+    overrides).  ``autoscale=True`` (replicated pure workers only) makes the
+    host farm grow/shrink its active worker set at runtime from observed
+    queue depth, between 1 and ``n`` (or ``os.cpu_count()`` when ``n`` is
+    omitted)."""
     fn = None
+    n_auto = n == "auto" or (n is None and autoscale)
+    if n_auto:
+        n = None
     if isinstance(workers, (FFNode, Skeleton, FFGraph, SeqG, PipeG, FarmG,
                             MapG, A2AG)):
         g = _to_g(workers)
@@ -180,10 +207,11 @@ def farm(workers: Any, n: Optional[int] = None, *, emitter: Any = None,
                 raise GraphError("cannot replicate a stateful worker; pass a "
                                  "list of instances or farm(fn, n=...)")
     elif callable(workers):
-        if n is None:
-            raise GraphError("farm(fn) needs n=<replicas>")
+        if n is None and not n_auto:
+            raise GraphError("farm(fn) needs n=<replicas> (or n=\"auto\" / "
+                             "autoscale=True to let the compiler choose)")
         fn = workers
-        ws = [SeqG(workers, pure=True) for _ in range(n)]
+        ws = [SeqG(workers, pure=True) for _ in range(n if n is not None else 1)]
     else:
         try:
             ws = [_to_g(w) for w in list(workers)]
@@ -194,9 +222,16 @@ def farm(workers: Any, n: Optional[int] = None, *, emitter: Any = None,
             raise GraphError("n disagrees with explicit worker list")
     if not ws:
         raise GraphError("farm with no workers")
+    if (autoscale or n_auto) and fn is None:
+        raise GraphError("n=\"auto\"/autoscale farms need one replicated pure "
+                         "worker: farm(fn, autoscale=True)")
+    if autoscale and (lb is not None or ondemand is not None):
+        raise GraphError("autoscale installs its own load balancer; "
+                         "drop lb=/ondemand= or autoscale=")
     return FFGraph(FarmG(ws, emitter=None if emitter is None else _to_g(emitter),
                          collector=None if collector is None else _to_g(collector),
-                         lb=lb, ondemand=ondemand, fn=fn))
+                         lb=lb, ondemand=ondemand, fn=fn, n_auto=n_auto,
+                         autoscale=autoscale))
 
 
 def ffmap(splitter: Any, workers: Sequence, composer: Any) -> "FFGraph":
@@ -243,7 +278,9 @@ class A2ASkeleton(Skeleton):
 
         def send(y: Any) -> None:
             if self._router is not None:
-                j = self._router(y, nR) % nR
+                # int() so jax/numpy-scalar-returning routers (shared with
+                # the device lowering, where they must trace) index the grid
+                j = int(self._router(y, nR)) % nR
             else:
                 j, rr[0] = rr[0], (rr[0] + 1) % nR
             self._grid.push(i, j, y)
@@ -274,12 +311,15 @@ class A2ASkeleton(Skeleton):
             try:
                 node.svc_end()
             finally:
-                for j in range(nR):
-                    self._grid.push(i, j, EOS)
                 if not input_eos:
                     # early exit (voluntary or crash): hand the lane to a
-                    # detached drainer so the feeder never wedges on it
+                    # detached drainer FIRST — the grid EOS fan-out below can
+                    # block on a dead right worker's full column, and the
+                    # feeder must never wedge on this worker's input lane
+                    # while that resolves
                     spawn_drainer(self._spmc.lanes[i].pop)
+                for j in range(nR):
+                    self._grid.push(i, j, EOS)
 
     def _right_loop(self, j: int, node: FFNode) -> None:
         nL = len(self._left)
@@ -391,15 +431,54 @@ class FFGraph:
         g._wrap = self._wrap
         return g
 
-    # -- the single lowering entry point -------------------------------------
+    # -- the staged compiler entry point -------------------------------------
+    def compile(self, plan: Any = None, *, mode: str = "auto",
+                costs: Optional[dict] = None, sample: Any = None,
+                placements: Optional[dict] = None, capacity: int = 512,
+                results_capacity: int = 4096, axis: str = "data",
+                feedback_steps: Optional[int] = None,
+                device_batch: Optional[int] = None,
+                a2a_capacity_factor: Optional[float] = None,
+                normalize: bool = True) -> "Runner":
+        """The staged compile pipeline ``normalize -> annotate -> place ->
+        emit`` (core/compiler.py):
+
+        * ``normalize`` — the :meth:`optimize` rewrites;
+        * ``annotate`` — per-node :class:`~repro.core.compiler.CostEstimate`
+          from ``costs=``, ``ff_cost``/``ff_flops`` attributes, or timing the
+          node on ``sample=``;
+        * ``place`` — a :class:`~repro.core.compiler.Placement` per top-level
+          stage (host thread vs. device, farm width from the cost model),
+          overridable via ``placements={stage_index_or_worker_object: ...}``;
+        * ``emit`` — :class:`HostRunner`, :class:`DeviceRunner`, or the
+          hybrid runner (host stages over SPSC queues feeding device
+          segments through device-put boundary nodes).
+
+        ``feedback_steps=K`` lets a ``wrap_around`` graph lower onto the mesh
+        through ``core.device.feedback_scan`` (K synchronous turns of the
+        feedback channel).  ``a2a_capacity_factor`` bounds the device
+        all_to_all expert lanes (default: lossless, host-parity).  ``mode``
+        forces placement: "host", "device", or cost-driven "auto"."""
+        from .compiler import compile_graph
+        return compile_graph(self, plan, mode=mode, costs=costs,
+                             sample=sample, placements=placements,
+                             capacity=capacity,
+                             results_capacity=results_capacity, axis=axis,
+                             feedback_steps=feedback_steps,
+                             device_batch=device_batch,
+                             a2a_capacity_factor=a2a_capacity_factor,
+                             normalize=normalize)
+
     def lower(self, plan: Any = None, *, capacity: int = 512,
               results_capacity: int = 4096, axis: str = "data") -> "Runner":
-        """``plan=None`` -> :class:`HostRunner` (threads over SPSC queues);
-        a ShardingPlan -> :class:`DeviceRunner` (core/device.py on its mesh)."""
-        if plan is None:
-            return HostRunner(self, capacity=capacity,
-                              results_capacity=results_capacity)
-        return DeviceRunner(self, plan, axis=axis)
+        """Compat wrapper over :meth:`compile`: ``plan=None`` forces every
+        stage onto host threads (:class:`HostRunner`); a ShardingPlan forces
+        the whole graph onto the mesh (:class:`DeviceRunner`)."""
+        from .compiler import compile_graph
+        return compile_graph(self, plan,
+                             mode="host" if plan is None else "device",
+                             normalize=False, capacity=capacity,
+                             results_capacity=results_capacity, axis=axis)
 
 
 # ---------------------------------------------------------------------------
@@ -453,11 +532,19 @@ def _normalize(n: Any) -> Any:
             prev = fused[-1] if fused else None
             if (_fusable_farm(s) and _fusable_farm(prev)
                     and len(prev.workers) == len(s.workers)):
-                workers = [PipeG([a, b])
-                           for a, b in zip(prev.workers, s.workers)]
                 fn = (_compose(prev.fn, s.fn)
                       if prev.fn is not None and s.fn is not None else None)
-                fused[-1] = FarmG(workers, fn=fn)
+                if (fn is None and (prev.n_auto or s.n_auto
+                                    or prev.autoscale or s.autoscale)):
+                    # an auto/autoscale width needs a replicable fn: fusing
+                    # without one would silently pin the farm to width 1
+                    fused.append(s)
+                    continue
+                workers = [PipeG([a, b])
+                           for a, b in zip(prev.workers, s.workers)]
+                fused[-1] = FarmG(workers, fn=fn,
+                                  n_auto=prev.n_auto or s.n_auto,
+                                  autoscale=prev.autoscale or s.autoscale)
                 continue
             fused.append(s)
         # 3. collector-emitter collapse: absorb pure seq stages into the
@@ -513,10 +600,24 @@ def _build_host(n: Any, capacity: int) -> Any:
         return Pipeline(*[_build_host(s, capacity) for s in n.stages],
                         capacity=capacity)
     if isinstance(n, FarmG):
+        workers, lb = n.workers, n.lb
+        if n.autoscale:
+            # materialize the max worker set; the balancer moves the active
+            # boundary at runtime from observed lane depth
+            max_w = (max(1, os.cpu_count() or 1) if n.n_auto
+                     else max(1, len(n.workers)))
+            workers = [SeqG(n.fn, pure=True) for _ in range(max_w)]
+            lb = AutoscaleLB(max_workers=max_w)
+        elif n.n_auto and len(n.workers) == 1:
+            # width left to the compiler; emit() materializes the cost-chosen
+            # width — this fallback covers direct lower() of an auto farm
+            width = getattr(n.placement, "width", None) or (os.cpu_count() or 1)
+            workers = [SeqG(n.fn, pure=True) for _ in range(max(1, width))]
         # a LoadBalancer binds to one farm's lanes at _start: sharing it
         # across lowerings would let one runner steal another's routing
-        f = Farm([_build_host(w, capacity) for w in n.workers],
-                 lb=None if n.lb is None else _mark_single_use(n.lb),
+        f = Farm([_build_host(w, capacity) for w in workers],
+                 lb=lb if n.autoscale else
+                 (None if lb is None else _mark_single_use(lb)),
                  capacity=capacity)
         if n.emitter is not None:
             f.add_emitter(_build_host(n.emitter, capacity))
@@ -774,30 +875,31 @@ def _device_fn(n: Any) -> tuple[Callable, bool]:
         if n.collector is not None:
             fn = _compose(fn, n.collector.node)
         return fn, True
-    raise GraphError(f"no device lowering for {type(n).__name__} "
-                     "(use the host path or feedback_scan/tensor_map directly)")
+    raise GraphError(f"no device lowering for {type(n).__name__} here "
+                     "(all_to_all/feedback lower only at the top level of the "
+                     "graph via compile(); otherwise use the host path or "
+                     "feedback_scan/tensor_map directly)")
 
 
 class DeviceRunner(Runner):
     """Graph lowered through core/device.py onto a JAX mesh: the stream is
     stacked into a batch, farm stages become ``shard_map`` over the data axis
     (round-robin == even batch sharding), pure seq stages are jitted and
-    vmapped.  Semantics match :class:`HostRunner` on pure graphs up to
-    output ordering (the host farm collector is arrival-ordered)."""
+    vmapped, ``all_to_all`` stages become MoE-style dispatch/combine
+    (``core.device.a2a_dispatch``), and ``wrap_around`` graphs run
+    ``feedback_steps`` synchronous turns through ``core.device.feedback_scan``.
+    Semantics match :class:`HostRunner` on pure graphs up to output ordering
+    (the host farm collector is arrival-ordered)."""
 
-    def __init__(self, graph: FFGraph, plan: Any, axis: str = "data"):
+    def __init__(self, graph: FFGraph, plan: Any, axis: str = "data",
+                 feedback_steps: Optional[int] = None,
+                 a2a_capacity_factor: Optional[float] = None):
         import jax
-        from . import device as dev
-        if graph._wrap:
-            raise GraphError("device feedback lowers via "
-                             "core.device.feedback_scan, not lower(plan)")
-        fn, uses_farm = _device_fn(graph.root)
-        self._axis_size = int(plan.mesh.shape[axis]) if uses_farm else 1
-        if uses_farm:
-            self._batched = jax.jit(dev.farm_map(lambda xs: jax.vmap(fn)(xs),
-                                                 plan.mesh, axis=axis))
-        else:
-            self._batched = jax.jit(jax.vmap(fn))
+        from .compiler import make_device_batched
+        batched, self._axis_size = make_device_batched(
+            graph, plan, axis=axis, feedback_steps=feedback_steps,
+            a2a_capacity_factor=a2a_capacity_factor)
+        self._batched = jax.jit(batched)
         self._t0 = self._t1 = 0.0
 
     def run(self, stream: Sequence) -> List[Any]:
@@ -810,8 +912,8 @@ class DeviceRunner(Runner):
         n = len(items)
         pad = (-n) % self._axis_size
         xs = jnp.stack(items + items[:1] * pad)
-        ys = jax.block_until_ready(self._batched(xs))
+        ys = jax.block_until_ready(self._batched(xs, jnp.int32(0)))
         self._t1 = time.perf_counter()
         # unstack the batch axis of every output leaf (a per-item function
-        # may return a pytree, not just one array)
+        # may return a pytree, not just one array); padding rows dropped
         return [jax.tree.map(lambda t: t[i], ys) for i in range(n)]

@@ -54,6 +54,19 @@ def amdahl(serial_fraction: float, n: int) -> float:
     return 1.0 / (serial_fraction + (1.0 - serial_fraction) / n)
 
 
+def choose_farm_width(t_task: float, n_max: int, t_emit: float = 0.0,
+                      t_collect: float = 0.0,
+                      overhead: float = 2e-5) -> int:
+    """Smallest worker count whose per-item service time hits the farm's
+    serial floor: service = max(t_emit, t_task/nw, t_collect), so adding
+    workers beyond t_task/floor buys nothing (paper Sec. 13).  ``overhead``
+    is the channel's own service time (queue push/pop) — the floor even for
+    a free emitter.  Used by the graph compiler's ``place`` stage."""
+    floor = max(t_emit, t_collect, overhead, 1e-9)
+    w = math.ceil(t_task / floor)
+    return max(1, min(w, max(1, n_max)))
+
+
 def pipeline_bubble_fraction(n_stages: int, n_microbatches: int) -> float:
     """GPipe bubble: (S-1)/(M+S-1) — the fill/drain idle fraction of the
     device pipeline skeleton."""

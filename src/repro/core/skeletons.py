@@ -108,6 +108,57 @@ class BroadcastLB(LoadBalancer):
         return self.BROADCAST
 
 
+class AutoscaleLB(LoadBalancer):
+    """Autoscaling farm schedule: grow/shrink the *active* worker set from
+    observed queue depth.
+
+    All worker threads exist (a parked thread blocked on an empty lane costs
+    nothing — FastFlow's blocking mode); scaling moves the round-robin
+    routing boundary between ``min_workers`` and ``max_workers``.  Every
+    ``adjust_every`` routed tasks the balancer looks at the mean depth of the
+    active lanes: above ``hi`` it activates one more worker, below ``lo`` it
+    retires the last one (items already queued on a retired lane still get
+    processed — its thread only stops receiving new work)."""
+
+    def __init__(self, min_workers: int = 1, max_workers: Optional[int] = None,
+                 hi: float = 2.0, lo: float = 0.25, adjust_every: int = 16):
+        super().__init__()
+        self.min_workers = max(1, min_workers)
+        self.max_workers = max_workers
+        self.hi = hi
+        self.lo = lo
+        self.adjust_every = max(1, adjust_every)
+        self.cur = self.min_workers
+        self.grown = 0
+        self.shrunk = 0
+        self._routed = 0
+        self._next = 0
+
+    def _attach(self, lanes: SPMCQueue) -> None:
+        super()._attach(lanes)
+        if self.max_workers is None:
+            self.max_workers = self.nworkers
+        self.max_workers = min(self.max_workers, self.nworkers)
+        self.cur = min(max(self.cur, self.min_workers), self.max_workers)
+
+    def _adjust(self) -> None:
+        depth = sum(len(self._lanes.lanes[i]) for i in range(self.cur)) / self.cur
+        if depth > self.hi and self.cur < self.max_workers:
+            self.cur += 1
+            self.grown += 1
+        elif depth < self.lo and self.cur > self.min_workers:
+            self.cur -= 1
+            self.shrunk += 1
+
+    def selectworker(self, task: Any) -> int:
+        self._routed += 1
+        if self._routed % self.adjust_every == 0:
+            self._adjust()
+        i = self._next % self.cur
+        self._next = (i + 1) % self.cur
+        return i
+
+
 # ---------------------------------------------------------------------------
 # Skeleton base: anything that can sit in a streaming network
 # ---------------------------------------------------------------------------

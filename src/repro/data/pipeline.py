@@ -1,25 +1,29 @@
 """Host data pipeline = an FFGraph program carrying real traffic.
 
-A two-stage building-blocks pipeline feeds the training loop:
+A building-blocks pipeline feeds the training loop:
 
-    pipeline( Reader source, DevicePut stage )  --lower()-->  host threads
+    pipeline( Reader source, DevicePut stage[, compute stage] )
 
-    [Reader emitter] --SPSC--> [device-put stage] --bounded SPSC--> train loop
+compiled through the staged graph compiler (``FFGraph.compile``): the reader
+and device-put boundary stay host-placed (stateful nodes over SPSC queues),
+and an optional pure ``compute`` stage — e.g. tokenization-as-a-matmul or
+augmentation with declared ``ff_flops`` — is cost-placed onto the mesh, so a
+single graph runs as a *hybrid* plan: reader threads feeding a sharded
+compute farm through device-put boundary nodes.
 
-The graph is lowered through the single ``FFGraph.lower()`` entry point onto
-host threads; the runner's bounded results queue provides back-pressure (the
-device never waits on the host unless the host truly falls behind — and the
-host can never run unboundedly ahead), exactly the role of FastFlow's
-fixed-capacity lanes.
+The runner's bounded results queue provides back-pressure (the device never
+waits on the host unless the host truly falls behind — and the host can
+never run unboundedly ahead), exactly the role of FastFlow's fixed-capacity
+lanes.
 """
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 
-from ..core.graph import FFGraph, pipeline as ff_pipeline
+from ..core.graph import FFGraph, pipeline as ff_pipeline, seq as ff_seq
 from ..core.node import FFNode
 
 
@@ -53,15 +57,26 @@ class _DevicePutNode(FFNode):
 
 class DataPipeline:
     """run_then_freeze()-style accelerator interface: the training loop just
-    calls ``get()``; EOS -> None.  ``self.graph`` is the FFGraph program."""
+    calls ``get()``; EOS -> None.  ``self.graph`` is the FFGraph program and
+    ``self.placements`` the compiler's per-stage host/device decisions."""
 
     def __init__(self, source, shardings=None, n_batches: Optional[int] = None,
-                 prefetch: int = 2):
+                 prefetch: int = 2, compute: Optional[Callable] = None,
+                 plan=None):
         self.source = source
-        self.graph: FFGraph = ff_pipeline(_ReaderNode(source, n_batches),
-                                          _DevicePutNode(shardings))
-        self._runner = self.graph.lower(capacity=max(2, prefetch),
-                                        results_capacity=max(2, prefetch))
+        stages = [_ReaderNode(source, n_batches), _DevicePutNode(shardings)]
+        if compute is not None:
+            # a pure seq stage, NOT a farm: the training loop consumes an
+            # ordered stream and the checkpoint cursor assumes it — a host
+            # farm's collector is arrival-ordered, so width must stay 1 here;
+            # both the host FnNode and the device boundary node are FIFO
+            stages.append(ff_seq(compute, pure=True))
+        self.graph: FFGraph = ff_pipeline(*stages)
+        self._runner = self.graph.compile(
+            plan if compute is not None else None,
+            capacity=max(2, prefetch), results_capacity=max(2, prefetch),
+            device_batch=1)
+        self.placements = getattr(self._runner, "placements", [])
         self._started = False
 
     def start(self) -> "DataPipeline":
@@ -82,8 +97,8 @@ class DataPipeline:
         pass
 
 
-def make_pipeline(source, plan=None, n_batches=None,
-                  prefetch: int = 2) -> DataPipeline:
+def make_pipeline(source, plan=None, n_batches=None, prefetch: int = 2,
+                  compute: Optional[Callable] = None) -> DataPipeline:
     shardings = None
     if plan is not None:
         st = source.state()          # peek one batch without consuming it
@@ -92,4 +107,5 @@ def make_pipeline(source, plan=None, n_batches=None,
         shardings = {
             k: plan.sharding_for(("batch",) + (None,) * (v.ndim - 1), v.shape)
             for k, v in probe.items()}
-    return DataPipeline(source, shardings, n_batches, prefetch).start()
+    return DataPipeline(source, shardings, n_batches, prefetch,
+                        compute=compute, plan=plan).start()

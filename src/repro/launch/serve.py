@@ -38,6 +38,8 @@ def main():
     eng = InferenceEngine(cfg, plan, params, max_batch=args.max_batch,
                           cache_len=args.cache_len)
     print(f"engine graph: {eng.graph.describe()}")
+    for desc, p in eng.placements:
+        print(f"  [{p.target:6s}] {desc}")
     eng.run_then_freeze()
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()

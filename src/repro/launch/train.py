@@ -49,6 +49,8 @@ def main():
     src = SyntheticLMSource(cfg.vocab, args.seq, args.batch, seed=0)
     pipe = make_pipeline(src, plan, n_batches=args.steps + 8)
     print(f"data graph: {pipe.graph.describe()}")
+    for desc, p in pipe.placements:
+        print(f"  [{p.target:6s}] {desc}")
     step = jax.jit(make_train_step(
         cfg, plan, cosine_warmup(args.lr, 20, args.steps)), donate_argnums=0)
     driver = TrainDriver(step, state, pipe,

@@ -222,8 +222,13 @@ class InferenceEngine:
         # 256-slot input queue — offload() blocks once this many requests
         # are waiting for a slot, instead of growing host memory unboundedly
         self.max_pending = 256
-        self._runner = self.graph.lower(capacity=self.max_pending,
-                                        results_capacity=1024)
+        # staged compiler: every node here is stateful (slot scheduler,
+        # batched caches, per-request bookkeeping) so place() pins the whole
+        # feedback loop to host threads — the SPMD decode step inside
+        # DecodeNode is already the device side of the program
+        self._runner = self.graph.compile(capacity=self.max_pending,
+                                          results_capacity=1024)
+        self.placements = getattr(self._runner, "placements", [])
 
     @property
     def steps(self) -> int:
