@@ -2,8 +2,12 @@
 adapted from shared-memory multicores to TPU pods, unified behind one
 composable *building blocks* graph API and one staged graph compiler.
 
-Layer 1-2 (``core.queues``): lock-free SPSC ring buffers, composed into
-SPMC / MPSC / MPMC networks — the channels every host skeleton runs over.
+Layer 1-2 (``core.queues``, ``core.shm``): lock-free SPSC ring buffers,
+composed into SPMC / MPSC / MPMC networks — the channels every host skeleton
+runs over.  ``core.queues`` is the thread-tier instance; ``core.shm`` lays
+the same fixed-slot ring out in ``multiprocessing.shared_memory`` (raw-numpy
+slab fast path, pickled-bytes fallback) so the ring crosses OS processes —
+FastFlow's actual multicore claim.
 
 Layer 3 (``core.node``, ``core.skeletons``): the paper-faithful host
 runtime — ``ff_node`` (``svc``/``svc_init``/``svc_end``), ``Pipeline``,
@@ -23,12 +27,27 @@ explicit stages —
    flattening, collector-emitter collapse, farm/pipeline fusion);
 2. **annotate**: a ``CostEstimate`` per node from the paper's Sec. 13
    algebra in ``core.perf_model`` (declared ``ff_cost``/``ff_flops``,
-   explicit ``costs=``, or timing the node on a ``sample`` item);
-3. **place**: a ``Placement`` per top-level stage — host thread vs. device,
-   farm width from ``choose_farm_width``, overridable per node;
-4. **emit**: ``HostRunner`` (threads over SPSC queues), ``DeviceRunner``
-   (the mesh via ``core.device``), or the *hybrid* runner — host stages over
-   SPSC queues feeding device segments through device-put boundary nodes.
+   explicit ``costs=``, or timing the node on a ``sample`` item), plus a
+   GIL-sensitivity signal: set ``fn.ff_releases_gil = True`` on workers
+   whose hot loop drops the GIL (I/O, large BLAS calls, jitted device
+   steps) or ``False`` on ones that hold it (pure-Python / small-array
+   numpy); undeclared workers are probed by timing the node solo vs. under
+   two concurrent threads when a ``sample`` is available;
+3. **place**: a ``Placement`` per top-level stage across the three-backend
+   host tier plus the mesh — host *thread*, host *process* (a GIL-bound
+   farm gains true parallelism worth more than the shared-memory hop), or
+   *device* — consuming the constants ``perf_model.calibrate()`` measures
+   at startup (host peak FLOP/s, thread-queue hop, process-lane hop, device
+   dispatch; cached on disk) instead of baked-in defaults; farm width from
+   ``choose_farm_width``; all overridable per node;
+4. **emit**: ``HostRunner`` (threads over SPSC queues), ``ProcessRunner``
+   (process-placed farms run OS-process workers over the shared-memory
+   rings of ``core.shm``, bridged into the thread network by
+   ``core.process.ProcessFarmNode`` — order-preserving, crash-surfacing),
+   ``DeviceRunner`` (the mesh via ``core.device``), or the *hybrid* runner
+   — host stages over SPSC queues feeding device segments through
+   device-put boundary nodes.  Thread -> process -> device programs compose
+   in one graph.
 
 ``emit`` covers every block on both targets: farms are ``shard_map`` over
 the data axis, ``all_to_all`` lowers to MoE-style dispatch/combine
@@ -51,11 +70,13 @@ from .queues import MPMCQueue, MPSCQueue, QueueClosed, SPMCQueue, SPSCQueue
 from .skeletons import (AutoscaleLB, BroadcastLB, Farm, FF_EOS, FFMap,
                         LoadBalancer, OnDemandLB, Pipeline, RoundRobinLB,
                         Skeleton)
+from .shm import ShmMPSCQueue, ShmSPMCQueue, ShmSPSCQueue
 from .graph import (A2ASkeleton, Deliver, FFGraph, GraphError, Runner,
                     all_to_all, farm, ffmap, pipeline, seq)
 from .graph import HostRunner, DeviceRunner
-from .compiler import (CostEstimate, HybridRunner, Placement, annotate,
-                       compile_graph, emit, place)
+from .process import ProcessFarmNode, WorkerCrashed
+from .compiler import (CostEstimate, HybridRunner, Placement, ProcessRunner,
+                       annotate, compile_graph, emit, place)
 from .accelerator import JaxAccelerator
 from .plan import DEFAULT_RULES, ShardingPlan, single_device_plan
 from . import device, perf_model
@@ -63,11 +84,13 @@ from . import device, perf_model
 __all__ = [
     "EOS", "GO_ON", "FF_EOS", "FFNode", "FnNode",
     "SPSCQueue", "SPMCQueue", "MPSCQueue", "MPMCQueue", "QueueClosed",
+    "ShmSPSCQueue", "ShmSPMCQueue", "ShmMPSCQueue",
     "Pipeline", "Farm", "FFMap", "Skeleton",
     "LoadBalancer", "RoundRobinLB", "OnDemandLB", "BroadcastLB",
     "AutoscaleLB",
     "FFGraph", "GraphError", "Deliver", "Runner", "HostRunner",
-    "DeviceRunner", "HybridRunner", "A2ASkeleton",
+    "DeviceRunner", "HybridRunner", "ProcessRunner", "A2ASkeleton",
+    "ProcessFarmNode", "WorkerCrashed",
     "seq", "pipeline", "farm", "ffmap", "all_to_all",
     "CostEstimate", "Placement", "annotate", "place", "emit",
     "compile_graph",

@@ -11,19 +11,29 @@ layers arbitrary networks over its core channels:
    paper's Sec. 13 algebra in ``core/perf_model.py``: per-item host time from
    ``costs=``, ``ff_cost``/``ff_flops``/``ff_bytes`` attributes on the
    worker, or by timing the node on a ``sample`` item; device time from the
-   TPU roofline when FLOPs are declared;
-3. **place** — assign each top-level stage a :class:`Placement` (host thread
-   vs. device) by comparing the host farm service time against the roofline
-   estimate, choose host farm widths with
-   :func:`~repro.core.perf_model.choose_farm_width`, honor per-node
-   overrides;
+   TPU roofline when FLOPs are declared.  With a ``sample``, annotate also
+   measures a *GIL-sensitivity* signal (the node timed solo vs. under two
+   concurrent threads) unless the worker declares ``ff_releases_gil``;
+3. **place** — assign each top-level stage a :class:`Placement` across the
+   three-backend host tier plus the mesh: host *thread* vs. host *process*
+   vs. *device*.  Thread-vs-process comes from the GIL signal and the
+   startup-calibrated hop costs (``perf_model.calibrate`` replaces the
+   baked-in constants with measured ones); host-vs-device from the roofline
+   comparison; farm widths from
+   :func:`~repro.core.perf_model.choose_farm_width`; all overridable per
+   node;
 4. **emit** — build the runner: all-host -> :class:`~repro.core.graph.
-   HostRunner`; all-device -> :class:`~repro.core.graph.DeviceRunner`; mixed
-   -> :class:`HybridRunner`, host stages over SPSC queues feeding device
-   segments on the mesh through device-put boundary nodes
-   (:class:`_DeviceStageNode` stacks a microbatch, ``device_put``s it with
-   the data-axis sharding, runs the jitted segment, and streams the
-   unstacked results downstream).
+   HostRunner`; all-device -> :class:`~repro.core.graph.DeviceRunner`;
+   process-placed farm stages become :class:`~repro.core.process.
+   ProcessFarmNode` boundary nodes (OS-process workers over the
+   shared-memory SPSC rings of ``core/shm.py``) inside a
+   :class:`ProcessRunner`; mixed host/device -> :class:`HybridRunner`, host
+   stages over SPSC queues feeding device segments on the mesh through
+   device-put boundary nodes (:class:`_DeviceStageNode` stacks a microbatch,
+   ``device_put``s it with the data-axis sharding, runs the jitted segment,
+   and streams the unstacked results downstream).  Thread -> process ->
+   device programs compose: a process farm is just one more host stage to
+   the hybrid runner.
 
 ``emit`` also closes the two device lowerings the monolithic ``lower()``
 lacked: ``all_to_all`` becomes MoE-style dispatch/combine
@@ -41,60 +51,80 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from . import perf_model as pm
 from .graph import (A2AG, DeviceRunner, FarmG, FFGraph, GraphError,
-                    HostRunner, MapG, PipeG, SeqG, _device_fn, _is_pure_seq)
+                    HostRunner, MapG, PipeG, SeqG, _device_fn, _is_pure_seq,
+                    _pure_of)
 from .node import GO_ON, FFNode
+from .process import ProcessFarmNode, fn_picklable
 
-# Cost-model constants: a host core's useful peak (for flops-declared nodes
-# with no measured time), the SPSC channel's own service time (the farm
-# width floor), and the per-microbatch host<->device boundary cost.
+# Baked-in cost-model fallbacks.  ``perf_model.calibrate()`` measures the
+# real values on this machine at startup (cached on disk); auto placement
+# consumes the calibration, these constants only back annotate/place before
+# any calibration exists (see perf_model.DEFAULT_CALIBRATION, kept in sync).
 HOST_PEAK_FLOPS = 5e10
 HOST_QUEUE_OVERHEAD_S = 2e-5
 DEVICE_DISPATCH_S = 2e-5
 DEFAULT_T_TASK_S = 5e-5
 
+_TARGETS = ("host", "host_process", "device")
+
 
 @dataclasses.dataclass
 class CostEstimate:
-    """Per-node cost, in host-seconds per item plus declared work terms."""
+    """Per-node cost, in host-seconds per item plus declared work terms.
+
+    ``releases_gil`` is the GIL-sensitivity signal: ``True`` when the node's
+    work runs concurrently under CPython threads (I/O, large BLAS, device
+    dispatch), ``False`` when it serializes on the GIL (the process tier's
+    reason to exist), ``None`` when undeclared and unmeasured."""
 
     t_task: float = DEFAULT_T_TASK_S
     flops: float = 0.0
     bytes: float = 0.0
     source: str = "default"     # default | declared | given | measured | derived
+    releases_gil: Optional[bool] = None
 
     def host_time(self, width: int = 1) -> float:
-        """Per-item service time on a ``width``-worker host farm."""
+        """Per-item service time on a ``width``-worker *thread* farm.  A
+        GIL-bound task gains nothing from extra threads."""
+        if self.releases_gil is False:
+            return self.t_task
         return self.t_task / max(1, width)
 
-    def device_time(self, n_chips: int = 1) -> Optional[float]:
+    def process_time(self, width: int = 1, hop_s: float = 2e-4) -> float:
+        """Per-item service time on a ``width``-worker *process* farm: true
+        parallelism, floored by the shared-memory lane hop."""
+        return max(self.t_task / max(1, width), hop_s)
+
+    def device_time(self, n_chips: int = 1,
+                    dispatch_s: float = DEVICE_DISPATCH_S) -> Optional[float]:
         """Roofline per-item time on the mesh, or None when no work terms
         are declared (an unmeasurable node never wins a device slot)."""
         if self.flops <= 0:
             return None
         terms = pm.roofline(self.flops, self.bytes, 0.0, max(1, n_chips))
-        return terms.step_time_s + DEVICE_DISPATCH_S
+        return terms.step_time_s + dispatch_s
 
 
 @dataclasses.dataclass
 class Placement:
-    """Where one top-level stage runs.  ``width`` is the host farm worker
-    count (or the mesh axis size for device farms); ``reason`` records the
+    """Where one top-level stage runs.  ``width`` is the farm worker count
+    (threads, processes, or the mesh axis size); ``reason`` records the
     cost-model comparison for reports/tests."""
 
-    target: str = "host"        # "host" | "device"
+    target: str = "host"        # "host" | "host_process" | "device"
     width: Optional[int] = None
     reason: str = ""
 
 
 def _as_placement(v: Any) -> Placement:
     if isinstance(v, Placement):
-        if v.target not in ("host", "device"):
-            raise GraphError(f"Placement target must be 'host' or 'device' "
+        if v.target not in _TARGETS:
+            raise GraphError(f"Placement target must be one of {_TARGETS} "
                              f"(got {v.target!r})")
         return v
-    if v in ("host", "device"):
+    if v in _TARGETS:
         return Placement(target=v, reason="override")
-    raise GraphError(f"placement override must be 'host', 'device', or a "
+    raise GraphError(f"placement override must be one of {_TARGETS} or a "
                      f"Placement (got {v!r})")
 
 
@@ -110,10 +140,42 @@ def _measure(fn: Callable, sample: Any, repeat: int = 3) -> float:
     return max(best, 1e-9)
 
 
+def _probe_gil_release(fn: Callable, sample: Any,
+                       solo: float) -> Optional[bool]:
+    """Does ``fn`` run concurrently under CPython threads?  Time it under
+    two concurrent threads: a GIL-bound task's per-call time stays ~solo
+    (the threads serialize), a GIL-releasing one drops toward solo/2.
+    Returns None when the task is too fast (noise) or too slow (probe cost)
+    to measure."""
+    import threading
+    if solo < 1e-4 or solo > 0.25 or (os.cpu_count() or 1) < 2:
+        return None
+    k = max(2, min(16, int(2e-3 / solo) + 1))
+
+    def loop() -> None:
+        for _ in range(k):
+            fn(sample)
+
+    threads = [threading.Thread(target=loop) for _ in range(2)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    per_call = (time.perf_counter() - t0) / (2 * k)
+    return per_call < 0.75 * solo
+
+
 def _estimate(key: Any, costs: Dict, sample: Any) -> CostEstimate:
     """Cost for one worker object: explicit ``costs=`` entry > declared
-    ``ff_cost``/``ff_flops`` attributes > timing on ``sample`` > default."""
+    ``ff_cost``/``ff_flops`` attributes > timing on ``sample`` > default.
+    The GIL signal comes from a declared ``ff_releases_gil`` attribute, or —
+    when the node was timed on a sample anyway — from the two-thread
+    concurrency probe."""
     if key is not None:
+        rg = getattr(key, "ff_releases_gil", None)
+        if rg is not None:
+            rg = bool(rg)
         try:
             given = costs.get(key)
         except TypeError:           # unhashable worker object
@@ -121,19 +183,28 @@ def _estimate(key: Any, costs: Dict, sample: Any) -> CostEstimate:
         if given is not None:
             if isinstance(given, CostEstimate):
                 return given
-            return CostEstimate(t_task=float(given), source="given")
+            return CostEstimate(t_task=float(given), source="given",
+                                releases_gil=rg)
         fl = float(getattr(key, "ff_flops", 0.0) or 0.0)
         by = float(getattr(key, "ff_bytes", 0.0) or 0.0)
         t = getattr(key, "ff_cost", None)
         if t is not None:
-            return CostEstimate(float(t), fl, by, "declared")
+            return CostEstimate(float(t), fl, by, "declared",
+                                releases_gil=rg)
         if fl > 0.0:
-            return CostEstimate(fl / HOST_PEAK_FLOPS, fl, by, "declared")
+            peak = pm.get_calibration(measure=False).peak_flops
+            return CostEstimate(fl / peak, fl, by, "declared",
+                                releases_gil=rg)
         if sample is not None and callable(key):
             try:
-                return CostEstimate(_measure(key, sample), source="measured")
+                solo = _measure(key, sample)
+                if rg is None:
+                    rg = _probe_gil_release(key, sample, solo)
+                return CostEstimate(solo, source="measured", releases_gil=rg)
             except Exception:       # noqa: BLE001 - sample may not fit the fn
                 pass
+        if rg is not None:
+            return CostEstimate(source="default", releases_gil=rg)
     return CostEstimate()
 
 
@@ -147,6 +218,14 @@ def annotate(graph: FFGraph, costs: Optional[Dict] = None,
     width-dependent and belongs to ``place``)."""
     costs = costs or {}
     memo: Dict[int, CostEstimate] = {}    # replicated workers share one fn
+
+    def merge_gil(subs: List[CostEstimate]) -> Optional[bool]:
+        gs = [c.releases_gil for c in subs]
+        if any(g is False for g in gs):
+            return False
+        if gs and all(g is True for g in gs):
+            return True
+        return None
 
     def est(key: Any, smp: Any) -> CostEstimate:
         k = id(key)
@@ -162,7 +241,8 @@ def annotate(graph: FFGraph, costs: Optional[Dict] = None,
             n.cost = CostEstimate(t_task=sum(c.t_task for c in subs),
                                   flops=sum(c.flops for c in subs),
                                   bytes=sum(c.bytes for c in subs),
-                                  source="derived")
+                                  source="derived",
+                                  releases_gil=merge_gil(subs))
         elif isinstance(n, FarmG):
             subs = [visit(w) for w in n.workers]
             key = n.fn if n.fn is not None else None
@@ -181,7 +261,7 @@ def annotate(graph: FFGraph, costs: Optional[Dict] = None,
                         + sum(c.t_task for c in rs) / len(rs)),
                 flops=sum(c.flops for c in (*ls, *rs)),
                 bytes=sum(c.bytes for c in (*ls, *rs)),
-                source="derived")
+                source="derived", releases_gil=merge_gil([*ls, *rs]))
         elif isinstance(n, MapG):
             for x in (n.splitter, *n.workers, n.composer):
                 visit(x)
@@ -213,6 +293,29 @@ def _device_eligible(n: Any) -> bool:
         return False
 
 
+def _process_ineligible_reason(n: Any) -> Optional[str]:
+    """Why this stage cannot run as a process farm (None when it can).
+
+    The process tier ships each worker's ``svc`` callable to a child once at
+    startup, so it needs a farm of pure (stateless-callable) workers with
+    pure-or-absent emitter/collector and the default round-robin schedule."""
+    if not isinstance(n, FarmG):
+        return "only farm stages process-lower (non-farm stage)"
+    if n.autoscale:
+        return "autoscale scales threads at runtime (host thread tier)"
+    if n.lb is not None or n.ondemand is not None:
+        return "custom lb/ondemand schedules are thread-tier only"
+    fns = [n.fn] if n.fn is not None else [_pure_of(w) for w in n.workers]
+    if any(f is None for f in fns):
+        return "stateful workers cannot ship to a worker process"
+    for part in (n.emitter, n.collector):
+        if part is not None and _pure_of(part) is None:
+            return "process farm needs pure emitter/collector"
+    if not all(fn_picklable(f) for f in fns):
+        return "worker callable is not picklable for process startup"
+    return None
+
+
 def _mesh_axis_size(plan: Any, axis: str) -> int:
     return int(dict(plan.mesh.shape).get(axis, 1))
 
@@ -222,18 +325,36 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
           mode: str = "auto") -> FFGraph:
     """Assign each top-level stage a :class:`Placement` (in place).
 
-    A stage goes to the device when it *can* lower there, a plan was given,
-    and the roofline estimate beats the best host farm service time; host
-    farm widths come from :func:`~repro.core.perf_model.choose_farm_width`.
-    ``overrides`` maps a stage index or worker object (the callable/FFNode
-    the stage was built from) to a :class:`Placement` (or
-    ``"host"``/``"device"``).  A ``wrap_around``
-    graph places on the device only as a whole (every stage eligible) and
-    only when ``feedback_steps`` says how many synchronous turns to run."""
+    Targets span the three-backend host tier plus the mesh: a stage goes to
+    the *device* when it can lower there, a plan was given, and the roofline
+    estimate beats the best host service time; a farm of GIL-bound workers
+    goes to the *process* tier when true parallelism over the calibrated
+    shared-memory hop beats GIL-serialized threads; everything else runs on
+    host *threads*.  Widths come from
+    :func:`~repro.core.perf_model.choose_farm_width` over the calibrated
+    channel costs.  ``overrides`` maps a stage index or worker object (the
+    callable/FFNode the stage was built from) to a :class:`Placement` (or
+    ``"host"``/``"host_process"``/``"device"``).  A ``wrap_around`` graph
+    places on the device only as a whole (every stage eligible) and only
+    when ``feedback_steps`` says how many synchronous turns to run."""
     overrides = overrides or {}
     stages = _top_stages(graph)
     n_cpu = max(1, os.cpu_count() or 1)
     n_chips = _mesh_axis_size(plan, axis) if plan is not None else 1
+    # calibrated channel/peak constants: the (one-time, disk-cached)
+    # measurement only triggers when a decision could actually use the
+    # process tier — a stage must be process-eligible AND measurably
+    # GIL-bound (the tier is unreachable on an unknown signal), otherwise
+    # the cheap cached-or-default lookup suffices
+    def _gil_bound(s: Any) -> bool:
+        c = s.cost
+        return isinstance(c, CostEstimate) and c.releases_gil is False
+
+    need_measure = mode == "process" or (
+        mode == "auto" and not graph._wrap
+        and any(_process_ineligible_reason(s) is None and _gil_bound(s)
+                for s in stages))
+    calib = pm.get_calibration(measure=need_measure)
 
     def override_for(i: int, s: Any) -> Optional[Placement]:
         # keys are stage indices or the hashable user objects a stage wraps
@@ -258,6 +379,7 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
     for i, s in enumerate(stages):
         ov = override_for(i, s)
         c = s.cost if isinstance(s.cost, CostEstimate) else CostEstimate()
+        proc_reason = _process_ineligible_reason(s)
         if isinstance(s, FarmG) and not s.autoscale:
             t_emit = getattr(getattr(s.emitter, "cost", None), "t_task", 0.0)
             t_coll = getattr(getattr(s.collector, "cost", None), "t_task", 0.0)
@@ -265,20 +387,38 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
                           pm.choose_farm_width(c.t_task, n_cpu,
                                                t_emit=t_emit,
                                                t_collect=t_coll,
-                                               overhead=HOST_QUEUE_OVERHEAD_S))
+                                               overhead=calib.queue_hop_s))
+            proc_width = (len(s.workers) if not s.n_auto else
+                          pm.choose_farm_width(c.t_task, n_cpu,
+                                               t_emit=t_emit,
+                                               t_collect=t_coll,
+                                               overhead=calib.proc_hop_s))
         elif isinstance(s, FarmG):
             host_width = len(s.workers) if not s.n_auto else n_cpu
+            proc_width = host_width
         else:
             host_width = 1
+            proc_width = 1
         if ov is not None:
+            if ov.target == "host_process" and proc_reason is not None:
+                raise GraphError(f"stage {i} ({s.describe()}) cannot be "
+                                 f"process-placed: {proc_reason}")
             if ov.width is None:
-                ov = dataclasses.replace(
-                    ov, width=n_chips if ov.target == "device" else host_width)
+                w = {"device": n_chips, "host_process": proc_width,
+                     "host": host_width}[ov.target]
+                ov = dataclasses.replace(ov, width=w)
             s.placement = ov
             continue
-        if mode == "host" or plan is None:
-            s.placement = Placement("host", host_width, "forced host"
-                                    if mode == "host" else "no plan")
+        if mode == "host":
+            s.placement = Placement("host", host_width, "forced host")
+            continue
+        if mode == "process":
+            if proc_reason is None:
+                s.placement = Placement("host_process", proc_width,
+                                        "forced process")
+            else:
+                s.placement = Placement("host", host_width,
+                                        f"forced process, but {proc_reason}")
             continue
         if mode == "device":
             s.placement = Placement("device", n_chips, "forced device")
@@ -296,20 +436,46 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
             s.placement = Placement("host", host_width,
                                     "autoscale requested (host runtime)")
             continue
-        if not _device_eligible(s):
-            s.placement = Placement("host", host_width, "stateful/host-only")
-            continue
-        dev_t = c.device_time(n_chips)
-        host_t = c.host_time(host_width)
-        if dev_t is not None and dev_t < host_t:
+        # -- cost-driven three-way decision --------------------------------
+        host_t = max(c.host_time(host_width), calib.queue_hop_s)
+        dev_t = (c.device_time(n_chips, calib.device_dispatch_s)
+                 if plan is not None and _device_eligible(s) else None)
+        # the process tier only pays off for demonstrably GIL-bound work
+        # wide enough to parallelize (an unknown signal stays on threads),
+        # and only past a hysteresis margin over the thread estimate — a
+        # candidate inside the margin drops out entirely rather than
+        # vetoing the host/device comparison
+        proc_t = None
+        if proc_reason is None and c.releases_gil is False \
+                and proc_width >= 2:
+            t = c.process_time(proc_width, calib.proc_hop_s)
+            if t < 0.8 * host_t:
+                proc_t = t
+        candidates = {"host": host_t}
+        if dev_t is not None:
+            candidates["device"] = dev_t
+        if proc_t is not None:
+            candidates["host_process"] = proc_t
+        target = min(candidates, key=candidates.get)
+        if target == "device":
             s.placement = Placement(
                 "device", n_chips,
                 f"roofline {dev_t*1e6:.1f}us < host {host_t*1e6:.1f}us")
-        else:
+        elif target == "host_process":
             s.placement = Placement(
-                "host", host_width,
-                "no declared FLOPs" if dev_t is None else
-                f"host {host_t*1e6:.1f}us <= roofline {dev_t*1e6:.1f}us")
+                "host_process", proc_width,
+                f"GIL-bound: {proc_width} processes {proc_t*1e6:.1f}us < "
+                f"threads {host_t*1e6:.1f}us "
+                f"(calibrated hop {calib.proc_hop_s*1e6:.1f}us, "
+                f"{calib.source})")
+        else:
+            host_reason = "stateful/host-only" \
+                if plan is not None and not _device_eligible(s) else (
+                    "no declared FLOPs" if dev_t is None and plan is not None
+                    else ("no plan" if plan is None else
+                          f"host {host_t*1e6:.1f}us <= roofline "
+                          f"{dev_t*1e6:.1f}us"))
+            s.placement = Placement("host", host_width, host_reason)
     return graph
 
 
@@ -423,6 +589,7 @@ class _DeviceStageNode(FFNode):
         self._label = label
         self._buf: List[Any] = []
         self._off = 0
+        self._flushes = 0
 
     def svc(self, item: Any) -> Any:
         self._buf.append(item)
@@ -451,23 +618,51 @@ class _DeviceStageNode(FFNode):
             xs = jax.device_put(xs, self._sharding)
         ys = jax.block_until_ready(self._batched(xs, jnp.int32(self._off)))
         self._off += n
+        self._flushes += 1
         for i in range(n):
             self.ff_send_out(jax.tree.map(lambda t: t[i], ys))
+
+    def node_stats(self) -> dict:
+        s = super().node_stats()
+        s["node"] = f"device[{self._label}]"
+        s["backend"] = "device"
+        s["flushes"] = self._flushes
+        return s
 
 
 class HybridRunner(HostRunner):
     """A mixed-placement graph: host stages over SPSC queues feeding device
-    segments through :class:`_DeviceStageNode` boundary nodes.  Same surface
-    as :class:`HostRunner`; ``placements`` records the compiler's per-stage
-    decisions."""
+    segments through :class:`_DeviceStageNode` boundary nodes (and possibly
+    process farms through :class:`~repro.core.process.ProcessFarmNode`).
+    Same surface as :class:`HostRunner`; ``placements`` records the
+    compiler's per-stage decisions."""
 
-    placements: List[Tuple[str, Placement]] = []
 
-    def describe_placements(self) -> str:
-        return "\n".join(f"  [{p.target:6s}] {desc}"
-                         + (f" width={p.width}" if p.width else "")
-                         + (f"  # {p.reason}" if p.reason else "")
-                         for desc, p in self.placements)
+class ProcessRunner(HostRunner):
+    """A host network whose process-placed farm stages run their workers as
+    OS processes over the shared-memory SPSC rings of ``core/shm.py`` — the
+    multicore-true host tier.  Same surface as :class:`HostRunner`; thread
+    stages and process farms share one streaming network."""
+
+
+def _lower_process_farm(s: FarmG, p: Placement, capacity: int,
+                        slot_bytes: int) -> SeqG:
+    """Replace a process-placed farm with its boundary node: to the rest of
+    the (thread-tier) network it is one ordinary host stage."""
+    reason = _process_ineligible_reason(s)
+    if reason is not None:
+        raise GraphError(f"cannot process-lower {s.describe()}: {reason}")
+    width = max(1, p.width or len(s.workers))
+    fns = [s.fn] * width if s.fn is not None \
+        else [_pure_of(w) for w in s.workers]
+    pre = _pure_of(s.emitter) if s.emitter is not None else None
+    post = _pure_of(s.collector) if s.collector is not None else None
+    node = ProcessFarmNode(
+        fns, pre=pre, post=post,
+        # shm slots are eagerly allocated segments: keep rings shallow
+        capacity=max(2, min(capacity, 64)), slot_bytes=slot_bytes,
+        label=f"process_farm[{len(fns)}]")
+    return SeqG(node)
 
 
 def _materialize_widths(n: Any) -> None:
@@ -488,12 +683,28 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
          results_capacity: int = 4096, axis: str = "data",
          feedback_steps: Optional[int] = None,
          device_batch: Optional[int] = None,
-         a2a_capacity_factor: Optional[float] = None) -> Any:
+         a2a_capacity_factor: Optional[float] = None,
+         shm_slot_bytes: int = 1 << 16) -> Any:
     """Build the runner for a placed graph (stage 4)."""
     stages = _top_stages(graph)
     placements = [s.placement if isinstance(s.placement, Placement)
                   else Placement("host") for s in stages]
     report = list(zip([s.describe() for s in stages], placements))
+
+    # process-placed farms lower first, into ProcessFarmNode boundary
+    # stages: from here on the rest of emit sees them as host stages, which
+    # is what lets thread -> process -> device programs compose freely
+    has_process = any(p.target == "host_process" for p in placements)
+    if has_process:
+        lowered = [(_lower_process_farm(s, p, capacity, shm_slot_bytes)
+                    if p.target == "host_process" else s)
+                   for s, p in zip(stages, placements)]
+        g2 = FFGraph(lowered[0] if len(lowered) == 1 else PipeG(lowered))
+        g2._wrap = graph._wrap
+        graph, stages = g2, lowered
+        placements = [dataclasses.replace(p, target="host")
+                      if p.target == "host_process" else p
+                      for p in placements]
     targets = {p.target for p in placements}
 
     if targets == {"device"}:
@@ -502,8 +713,9 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
                               a2a_capacity_factor=a2a_capacity_factor)
     elif targets == {"host"}:
         _materialize_widths(graph.root)
-        runner = HostRunner(graph, capacity=capacity,
-                            results_capacity=results_capacity)
+        cls = ProcessRunner if has_process else HostRunner
+        runner = cls(graph, capacity=capacity,
+                     results_capacity=results_capacity)
     else:
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -556,14 +768,15 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
                   capacity: int = 512, results_capacity: int = 4096,
                   axis: str = "data", feedback_steps: Optional[int] = None,
                   device_batch: Optional[int] = None,
-                  a2a_capacity_factor: Optional[float] = None) -> Any:
+                  a2a_capacity_factor: Optional[float] = None,
+                  shm_slot_bytes: int = 1 << 16) -> Any:
     """Run the staged pipeline: normalize -> annotate -> place -> emit.
 
     Note: stage-index keys in ``placements=`` refer to the *normalized*
     graph's top-level stages (normalize may collapse/fuse stages); worker
     objects (the callables/FFNodes stages were built from) survive the
     rewrites and are the stabler key."""
-    if mode not in ("auto", "host", "device"):
+    if mode not in ("auto", "host", "process", "device"):
         raise GraphError(f"unknown compile mode {mode!r}")
     if mode == "device" and plan is None:
         raise GraphError("compile(mode=\"device\") needs a ShardingPlan")
@@ -577,4 +790,5 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
     return emit(g, plan, capacity=capacity,
                 results_capacity=results_capacity, axis=axis,
                 feedback_steps=feedback_steps, device_batch=device_batch,
-                a2a_capacity_factor=a2a_capacity_factor)
+                a2a_capacity_factor=a2a_capacity_factor,
+                shm_slot_bytes=shm_slot_bytes)

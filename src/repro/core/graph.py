@@ -406,6 +406,15 @@ class A2ASkeleton(Skeleton):
             return True
         return self._col is not None and self._col.thread.is_alive()
 
+    def stats(self) -> dict:
+        grid = getattr(self, "_grid", None)
+        return {"type": "a2a",
+                "left": [n.node_stats() for n in self._left],
+                "right": [n.node_stats() for n in self._right],
+                "grid_max_depth": max(
+                    (l.max_depth for row in grid.grid for l in row),
+                    default=0) if grid is not None else 0}
+
 
 # ---------------------------------------------------------------------------
 # The graph
@@ -439,26 +448,35 @@ class FFGraph:
                 feedback_steps: Optional[int] = None,
                 device_batch: Optional[int] = None,
                 a2a_capacity_factor: Optional[float] = None,
-                normalize: bool = True) -> "Runner":
+                normalize: bool = True,
+                shm_slot_bytes: int = 1 << 16) -> "Runner":
         """The staged compile pipeline ``normalize -> annotate -> place ->
         emit`` (core/compiler.py):
 
         * ``normalize`` — the :meth:`optimize` rewrites;
         * ``annotate`` — per-node :class:`~repro.core.compiler.CostEstimate`
           from ``costs=``, ``ff_cost``/``ff_flops`` attributes, or timing the
-          node on ``sample=``;
+          node on ``sample=`` (which also probes GIL sensitivity unless the
+          worker declares ``ff_releases_gil``);
         * ``place`` — a :class:`~repro.core.compiler.Placement` per top-level
-          stage (host thread vs. device, farm width from the cost model),
-          overridable via ``placements={stage_index_or_worker_object: ...}``;
-        * ``emit`` — :class:`HostRunner`, :class:`DeviceRunner`, or the
-          hybrid runner (host stages over SPSC queues feeding device
-          segments through device-put boundary nodes).
+          stage across host *threads*, host *processes* (true shared-memory
+          parallelism for GIL-bound farms, costed with the startup-calibrated
+          constants of ``perf_model.calibrate``), and the *device*; farm
+          widths from the cost model; overridable via
+          ``placements={stage_index_or_worker_object: ...}``;
+        * ``emit`` — :class:`HostRunner`, :class:`DeviceRunner`,
+          :class:`~repro.core.compiler.ProcessRunner` (farm workers as OS
+          processes over shared-memory SPSC rings), or the hybrid runner
+          (host stages over SPSC queues feeding device segments through
+          device-put boundary nodes).
 
         ``feedback_steps=K`` lets a ``wrap_around`` graph lower onto the mesh
         through ``core.device.feedback_scan`` (K synchronous turns of the
         feedback channel).  ``a2a_capacity_factor`` bounds the device
-        all_to_all expert lanes (default: lossless, host-parity).  ``mode``
-        forces placement: "host", "device", or cost-driven "auto"."""
+        all_to_all expert lanes (default: lossless, host-parity).
+        ``shm_slot_bytes`` sizes the fixed shared-memory ring slots of
+        process-placed farms (raise it for large batches).  ``mode`` forces
+        placement: "host", "process", "device", or cost-driven "auto"."""
         from .compiler import compile_graph
         return compile_graph(self, plan, mode=mode, costs=costs,
                              sample=sample, placements=placements,
@@ -467,7 +485,8 @@ class FFGraph:
                              feedback_steps=feedback_steps,
                              device_batch=device_batch,
                              a2a_capacity_factor=a2a_capacity_factor,
-                             normalize=normalize)
+                             normalize=normalize,
+                             shm_slot_bytes=shm_slot_bytes)
 
     def lower(self, plan: Any = None, *, capacity: int = 512,
               results_capacity: int = 4096, axis: str = "data") -> "Runner":
@@ -638,13 +657,26 @@ def _build_host(n: Any, capacity: int) -> Any:
 
 
 class Runner:
-    """Common result surface of ``FFGraph.lower``."""
+    """Common result surface of ``FFGraph.lower``/``FFGraph.compile``."""
+
+    placements: List = []       # [(stage description, Placement)] from emit
 
     def run(self, stream: Optional[Sequence] = None) -> List[Any]:
         raise NotImplementedError
 
     def ffTime(self) -> float:
         return (self._t1 - self._t0) * 1e3
+
+    def describe_placements(self) -> str:
+        return "\n".join(f"  [{p.target:12s}] {desc}"
+                         + (f" width={p.width}" if p.width else "")
+                         + (f"  # {p.reason}" if p.reason else "")
+                         for desc, p in self.placements)
+
+    def stats(self) -> dict:
+        """Runtime stats: per-node service-time EMA, items processed, max
+        observed lane depth — populated while/after the graph runs."""
+        return {}
 
 
 class HostRunner(Runner):
@@ -833,6 +865,24 @@ class HostRunner(Runner):
             raise self.error()
         return out
 
+    def shutdown(self, timeout: float = 10.0) -> None:
+        """Best-effort unwind for a runner being discarded before its
+        stream ended (error, timeout, lost interest): feeds EOS so node
+        threads terminate and process-farm stages release their worker
+        processes and shared-memory segments.  Without this, a discarded
+        mid-stream runner's daemon threads (and any shm segments) linger
+        until interpreter exit."""
+        self._abandoned = True
+        if self._in_q is not None:
+            with self._push_lock:
+                self._in_q.try_push(EOS)
+        self.wait(timeout)
+
+    def stats(self) -> dict:
+        return {"backend": type(self).__name__,
+                "graph": self._skel.stats(),
+                "results_max_depth": self._results.max_depth}
+
 
 # ---------------------------------------------------------------------------
 # Device lowering
@@ -901,6 +951,8 @@ class DeviceRunner(Runner):
             a2a_capacity_factor=a2a_capacity_factor)
         self._batched = jax.jit(batched)
         self._t0 = self._t1 = 0.0
+        self._items = 0
+        self._batches = 0
 
     def run(self, stream: Sequence) -> List[Any]:
         import jax
@@ -914,6 +966,13 @@ class DeviceRunner(Runner):
         xs = jnp.stack(items + items[:1] * pad)
         ys = jax.block_until_ready(self._batched(xs, jnp.int32(0)))
         self._t1 = time.perf_counter()
+        self._items += n
+        self._batches += 1
         # unstack the batch axis of every output leaf (a per-item function
         # may return a pytree, not just one array); padding rows dropped
         return [jax.tree.map(lambda t: t[i], ys) for i in range(n)]
+
+    def stats(self) -> dict:
+        return {"backend": "DeviceRunner", "items": self._items,
+                "batches": self._batches,
+                "svc_time_ema_s": (self._t1 - self._t0) / max(1, self._items)}

@@ -16,6 +16,7 @@ its own thread; streams are the SPSC queues of core/queues.py.
 from __future__ import annotations
 
 import threading
+import time
 import traceback
 from typing import Any, Callable, Optional
 
@@ -68,6 +69,7 @@ class FFNode:
         self.thread: Optional[threading.Thread] = None
         self.error: Optional[BaseException] = None
         self.svc_calls: int = 0   # for stats (ffStats analogue)
+        self.svc_time_ema: float = 0.0   # EMA of svc() service time, seconds
         # When this node has an input stream but must generate initial tasks
         # itself (divide&conquer emitters on a feedback loop), set
         # ``prime = True``: svc(None) is called once before consuming input.
@@ -117,7 +119,11 @@ class FFNode:
                         input_eos = True
                         break
                 self.svc_calls += 1
+                t0 = time.perf_counter()
                 result = self.svc(None if task is _NO_INPUT else task)
+                dt = time.perf_counter() - t0
+                self.svc_time_ema = dt if self.svc_calls == 1 \
+                    else 0.8 * self.svc_time_ema + 0.2 * dt
                 if result is None:   # paper: returning NULL terminates the node
                     result = EOS
                 if result is EOS:
@@ -149,6 +155,12 @@ class FFNode:
     def _alive(self) -> bool:
         return self.thread is not None and self.thread.is_alive()
 
+    def node_stats(self) -> dict:
+        """Per-node runtime stats for ``runner.stats()``: items processed and
+        the service-time EMA (seconds)."""
+        return {"node": type(self).__name__, "items": self.svc_calls,
+                "svc_time_ema_s": self.svc_time_ema}
+
 
 class FnNode(FFNode):
     """Convenience: lift a plain callable into an ff_node."""
@@ -159,3 +171,8 @@ class FnNode(FFNode):
 
     def svc(self, task: Any) -> Any:
         return self._fn(task)
+
+    def node_stats(self) -> dict:
+        s = super().node_stats()
+        s["node"] = getattr(self._fn, "__name__", "FnNode")
+        return s

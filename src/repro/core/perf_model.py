@@ -13,7 +13,10 @@ benchmarks/roofline.py and the §Perf hillclimb.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
+import time
 from typing import Dict, Optional, Sequence
 
 
@@ -155,6 +158,210 @@ def roofline(flops_total: float, bytes_total: float,
         coll_bytes_dci=coll_bytes_dci_per_chip,
         model_flops=model_flops,
         model_flops_s=model_flops / (n_chips * hw.peak_flops_bf16))
+
+
+# --------------------------------------------------------------------------
+# Startup calibration — measured host constants for the compiler's place pass
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class HostCalibration:
+    """The host-tier cost constants ``place`` consumes.  ``source`` records
+    where they came from: baked-in ``default``s, a fresh ``measured`` run, or
+    the on-disk ``cached`` result of an earlier run on this machine."""
+
+    peak_flops: float           # useful numpy FLOP/s of one host core
+    queue_hop_s: float          # per-item thread-tier SPSC push+pop cost
+    proc_hop_s: float           # per-item process-lane (shm ring) hop cost
+    device_dispatch_s: float    # per-microbatch host<->device boundary cost
+    source: str = "default"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# conservative fallbacks, used only until/unless calibrate() has run
+DEFAULT_CALIBRATION = HostCalibration(
+    peak_flops=5e10, queue_hop_s=2e-5, proc_hop_s=2e-4,
+    device_dispatch_s=2e-5, source="default")
+
+_CALIB_VERSION = 1
+_calibration: Optional[HostCalibration] = None
+
+
+def _calib_cache_path() -> str:
+    override = os.environ.get("REPRO_FF_CALIB_CACHE")
+    if override:
+        return override
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro_ff", "calibration.json")
+
+
+def _measure_peak_flops() -> float:
+    import numpy as np
+    n = 192
+    a = np.random.default_rng(0).standard_normal((n, n)).astype(np.float32)
+    flops = 2.0 * n ** 3
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        a @ a
+        best = min(best, time.perf_counter() - t0)
+    return flops / max(best, 1e-9)
+
+
+def _measure_queue_hop() -> float:
+    from .queues import SPSCQueue
+    q = SPSCQueue(256)
+    n = 20_000
+    t0 = time.perf_counter()
+    for i in range(n):
+        q.try_push(i)
+        q.try_pop()
+    return max((time.perf_counter() - t0) / n, 1e-9)
+
+
+def _echo_main(in_lane, out_lane) -> None:
+    """Calibration child: bounce items straight back (proc-lane hop probe)."""
+    from .node import EOS
+    while True:
+        item = in_lane.pop()
+        if item is EOS:
+            break
+        out_lane.push(item)
+    out_lane.push_eos()
+
+
+def _measure_proc_hop(n: int = 200) -> float:
+    import numpy as np
+    from .process import _mp_context, _quiet_fork
+    from .shm import ShmSPSCQueue
+    ping = ShmSPSCQueue(capacity=16)
+    pong = ShmSPSCQueue(capacity=16)
+    proc = _mp_context().Process(target=_echo_main, args=(ping, pong),
+                                 daemon=True, name="ff-calibrate-echo")
+    with _quiet_fork():
+        proc.start()
+    payload = np.arange(64, dtype=np.float32)
+    try:
+        ping.push(payload, timeout=5.0)         # warm both directions
+        pong.pop(timeout=5.0)
+        # streaming, not ping-pong: the farm emitter pushes a stream while
+        # the collector drains, so the relevant hop cost is the pipelined
+        # per-item cost, not the one-item round-trip latency.  Items ride
+        # bare, like the farm protocol, so this measures the raw-slab path.
+        sent = recv = 0
+        deadline = time.monotonic() + 10.0
+        t0 = time.perf_counter()
+        while recv < n:
+            progressed = False
+            if sent < n and ping.try_push(payload):
+                sent += 1
+                progressed = True
+            ok, _ = pong.try_pop()
+            if ok:
+                recv += 1
+                progressed = True
+            if not progressed:
+                if time.monotonic() > deadline:
+                    raise TimeoutError("proc-hop calibration stalled")
+                time.sleep(1e-6)
+        rtt = 2.0 * (time.perf_counter() - t0) / n  # keep rtt/2 == per hop
+    finally:
+        try:
+            ping.push_eos(timeout=1.0)
+        except TimeoutError:
+            pass
+        proc.join(timeout=5.0)
+        if proc.is_alive():
+            proc.terminate()
+        ping.destroy()
+        pong.destroy()
+    return max(rtt / 2.0, 1e-9)
+
+
+def _measure_device_dispatch() -> float:
+    try:
+        import jax
+        import jax.numpy as jnp
+        f = jax.jit(lambda x: x + 1.0)
+        x = jnp.zeros((8,), jnp.float32)
+        jax.block_until_ready(f(x))             # compile outside the clock
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(x))
+            best = min(best, time.perf_counter() - t0)
+        return max(best, 1e-9)
+    except Exception:   # noqa: BLE001 - no usable backend: keep the default
+        return DEFAULT_CALIBRATION.device_dispatch_s
+
+
+def calibrate(cache: bool = True) -> HostCalibration:
+    """Measure the host-tier cost constants on this machine and (optionally)
+    persist them, replacing the baked-in defaults ``place`` would otherwise
+    consume: one core's useful numpy FLOP/s, the per-item thread-queue hop,
+    the per-item shared-memory process-lane hop, and the host<->device
+    dispatch cost."""
+    global _calibration
+    c = HostCalibration(
+        peak_flops=_measure_peak_flops(),
+        queue_hop_s=_measure_queue_hop(),
+        proc_hop_s=_measure_proc_hop(),
+        device_dispatch_s=_measure_device_dispatch(),
+        source="measured")
+    _calibration = c
+    if cache:
+        path = _calib_cache_path()
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w") as f:
+                json.dump({"version": _CALIB_VERSION,
+                           "cpu_count": os.cpu_count(), **c.as_dict()}, f)
+        except OSError:
+            pass
+    return c
+
+
+def _load_cached_calibration() -> Optional[HostCalibration]:
+    try:
+        with open(_calib_cache_path()) as f:
+            d = json.load(f)
+        if not isinstance(d, dict) \
+                or d.get("version") != _CALIB_VERSION \
+                or d.get("cpu_count") != os.cpu_count():
+            return None
+        return HostCalibration(
+            peak_flops=float(d["peak_flops"]),
+            queue_hop_s=float(d["queue_hop_s"]),
+            proc_hop_s=float(d["proc_hop_s"]),
+            device_dispatch_s=float(d["device_dispatch_s"]),
+            source="cached")
+    except (OSError, ValueError, KeyError, TypeError):
+        # any unreadable/corrupt cache is a miss, never a crash
+        return None
+
+
+def get_calibration(measure: bool = True) -> HostCalibration:
+    """The process-wide calibration: memoized, then the on-disk cache, then a
+    fresh :func:`calibrate` run (skipped when ``measure=False``, which
+    returns the baked-in defaults instead)."""
+    global _calibration
+    if _calibration is not None:
+        return _calibration
+    cached = _load_cached_calibration()
+    if cached is not None:
+        _calibration = cached
+        return cached
+    if not measure:
+        return DEFAULT_CALIBRATION
+    return calibrate()
+
+
+def reset_calibration() -> None:
+    """Drop the in-memory calibration (tests)."""
+    global _calibration
+    _calibration = None
 
 
 # ring-model per-chip traffic for each collective kind -----------------------

@@ -1,0 +1,331 @@
+"""The process-backed host tier: farm workers as OS processes over the
+shared-memory rings of ``core/shm.py``.
+
+CPython threads share one GIL, so the thread-backed host farm of
+``core/skeletons.py`` only parallelizes stages that release it (I/O, large
+BLAS calls, jitted device steps).  This module is FastFlow's actual
+multicore claim: a farm whose workers are *processes*, wired emitter ->
+workers -> collector over true shared-memory SPSC lanes, so CPU-bound
+Python/numpy ``svc`` stages scale with cores.
+
+:class:`ProcessFarmNode` is the bridge into the thread tier: it is itself an
+``ff_node`` that sits in an ordinary host streaming network.  Its ``svc``
+routes items round-robin onto per-worker shm lanes (the SPMC side); a
+collector thread drains the per-worker result lanes (the MPSC side),
+restores input order from sequence numbers, and forwards downstream via
+``ff_send_out``.  Worker processes receive their (picklable) ``svc``
+callable once at startup and then only raw items.  A worker that raises
+ships an error record back; a worker that *dies* (crash, kill) is detected
+by liveness polling — either way the surrounding runner surfaces the error
+instead of wedging.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import multiprocessing as mp
+import os
+import pickle
+import threading
+import time
+import traceback
+import warnings
+from typing import Any, Callable, Dict, List, Optional
+
+from .node import EOS, FFNode, GO_ON
+from .queues import QueueClosed
+from .shm import ShmError, ShmMPSCQueue, ShmSPMCQueue
+
+# fork keeps worker start cheap and lets closures ride along; spawn is the
+# fallback where fork does not exist (the callables must then pickle by
+# reference, which place() already checks before choosing this tier)
+_START_METHOD = "fork" if "fork" in mp.get_all_start_methods() else "spawn"
+
+
+def _mp_context():
+    return mp.get_context(_START_METHOD)
+
+
+@contextlib.contextmanager
+def _quiet_fork():
+    # jax warns on any fork from a multithreaded process; our children never
+    # touch jax (they run pure-python/numpy svc callables), so the warning
+    # is noise here
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message=r"os\.fork\(\) was called",
+                                category=RuntimeWarning)
+        yield
+
+
+def fn_picklable(fn: Callable) -> bool:
+    """Can this callable be shipped to a worker process at startup?"""
+    try:
+        pickle.dumps(fn)
+        return True
+    except Exception:   # noqa: BLE001 - unpicklable closures, lambdas (spawn)
+        return _START_METHOD == "fork" and callable(fn)
+
+
+class WorkerCrashed(RuntimeError):
+    """A farm worker process exited without finishing its stream."""
+
+
+def _worker_main(idx: int, fn: Callable, in_lane, out_lane) -> None:
+    """Child process body: pop an item, push ``fn(item)``.
+
+    Items ride the lanes bare — each lane is FIFO, so the parent matches
+    results to sequence numbers by arrival order and nothing extra crosses
+    the wire (bare ndarrays keep the raw-slab fast path).  EOS (or a closed
+    input lane) terminates; an exception in ``fn`` ships an error record
+    followed by EOS so the parent collector both surfaces the error and
+    stops waiting on this lane."""
+    try:
+        # FastFlow pins its farm threads round-robin onto cores
+        # (ff_mapping_utils); do the same for worker processes — schedulers
+        # on shared hosts otherwise stack them onto one core
+        os.sched_setaffinity(0, {idx % (os.cpu_count() or 1)})
+    except (AttributeError, OSError):
+        pass
+    try:
+        while True:
+            try:
+                got = in_lane.pop()
+            except QueueClosed:                     # parent unwound the farm
+                break
+            if got is EOS:
+                break
+            try:
+                out = fn(got)
+            except BaseException as e:  # noqa: BLE001 - shipped to the parent
+                out_lane.push_err(ShmError(idx, repr(e),
+                                           traceback.format_exc()))
+                return
+            out_lane.push(out)
+    finally:
+        try:
+            out_lane.push_eos()
+        except BaseException:   # noqa: BLE001 - parent may be gone
+            pass
+        in_lane.detach()
+        out_lane.detach()
+
+
+class ProcessFarmNode(FFNode):
+    """A farm stage whose workers are processes, embedded as one host node.
+
+    ``fns`` is one picklable per-item callable per worker (a replicated pure
+    farm passes the same function N times).  ``pre``/``post`` are the pure
+    emitter/collector callables the graph normal form absorbed into the farm
+    — they run in the parent, around the shm hop.  Output order follows
+    *input* order (a sequence-number reorder buffer), which is stricter than
+    the thread farm's arrival order and matches the device lowering."""
+
+    def __init__(self, fns: List[Callable], pre: Optional[Callable] = None,
+                 post: Optional[Callable] = None, capacity: int = 64,
+                 slot_bytes: int = 1 << 16, label: str = "process_farm"):
+        super().__init__()
+        if not fns:
+            raise ValueError("process farm with no workers")
+        self._fns = list(fns)
+        self._pre = pre
+        self._post = post
+        self._label = label
+        self._n = len(self._fns)
+        self._spmc = ShmSPMCQueue(self._n, capacity, slot_bytes)
+        self._mpsc = ShmMPSCQueue(self._n, capacity, slot_bytes)
+        ctx = _mp_context()
+        # workers spawn at build time (before the runner's thread network and
+        # any device work start) and park on their empty input lanes
+        self._procs = [
+            ctx.Process(target=_worker_main,
+                        args=(i, fn, self._spmc.lanes[i], self._mpsc.lanes[i]),
+                        daemon=True, name=f"ff-proc-worker-{i}")
+            for i, fn in enumerate(self._fns)]
+        with _quiet_fork():
+            for p in self._procs:
+                p.start()
+        self._seq = 0
+        self._delivered = 0
+        self._routed = [0] * self._n
+        # lane i is FIFO, so its results map to these seqs in arrival order
+        # (deque append/popleft from opposite ends is GIL-atomic)
+        self._lane_seqs = [collections.deque() for _ in range(self._n)]
+        self._eos_seen = [False] * self._n
+        self._collector: Optional[threading.Thread] = None
+        self._destroyed = False
+
+    @property
+    def width(self) -> int:
+        return self._n
+
+    # -- parent-side emitter -------------------------------------------------
+    def _push_alive(self, idx: int, payload: Any) -> bool:
+        """Blocking push to worker ``idx`` that fails over instead of
+        wedging when the worker process has died with a full lane — or when
+        the collector has already flagged the farm as failed (a live worker
+        blocked on its full result lane never drains its input again)."""
+        lane = self._spmc.lanes[idx]
+        delay = 1e-6
+        while not lane.try_push(payload):
+            if self.error is not None:
+                return False
+            # liveness only once the lane stays full for ~1ms (a waitpid
+            # syscall per spin would otherwise dominate the hop cost)
+            if delay >= 1e-3 and not self._procs[idx].is_alive():
+                return False
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-3)
+        return True
+
+    def svc(self, item: Any) -> Any:
+        if self.error is not None:      # collector flagged a failed farm
+            raise self.error
+        if self._pre is not None:
+            item = self._pre(item)
+        seq = self._seq
+        self._seq += 1
+        for off in range(self._n):
+            idx = (seq + off) % self._n
+            # record the seq before publishing the item: lane FIFO order is
+            # the seq order, and the collector must never see an unmapped
+            # result
+            self._lane_seqs[idx].append(seq)
+            if self._push_alive(idx, item):
+                self._routed[idx] += 1
+                return GO_ON
+            self._lane_seqs[idx].pop()  # un-record the failed attempt
+        # every worker is gone; the collector (or this) surfaces the crash
+        if self.error is None:
+            self.error = WorkerCrashed(
+                f"{self._label}: all {self._n} worker processes died")
+        raise self.error
+
+    # -- parent-side collector ----------------------------------------------
+    def _collect(self) -> None:
+        hold: Dict[int, Any] = {}       # out-of-order results by sequence
+        nxt = 0
+        delay = 1e-6
+        last_liveness = time.monotonic()
+        while not all(self._eos_seen):
+            ok, got, lane = self._mpsc.try_pop_any()
+            if not ok:
+                # adaptive backoff: a hard poll here steals CPU from the
+                # very workers it waits on (they share the machine's cores)
+                now = time.monotonic()
+                if now - last_liveness > 0.05:
+                    last_liveness = now
+                    if self._check_crashed():
+                        self._fail()
+                        return
+                time.sleep(delay)
+                delay = min(delay * 2, 1e-3)
+                continue
+            delay = 1e-6
+            if got is EOS:
+                self._eos_seen[lane] = True
+                continue
+            if isinstance(got, ShmError):
+                self.error = WorkerCrashed(
+                    f"{self._label}: worker {got.worker} raised "
+                    f"{got.exc}\n{got.tb}")
+                self._fail()
+                return
+            hold[self._lane_seqs[lane].popleft()] = got
+            while nxt in hold:
+                out = hold.pop(nxt)
+                nxt += 1
+                if self._post is not None:
+                    out = self._post(out)
+                self._delivered += 1
+                self.ff_send_out(out)
+
+    def _check_crashed(self) -> bool:
+        for i, p in enumerate(self._procs):
+            if not self._eos_seen[i] and not p.is_alive() \
+                    and self._mpsc.lanes[i].empty():
+                self.error = WorkerCrashed(
+                    f"{self._label}: worker {i} died "
+                    f"(exitcode={p.exitcode}) before end of stream")
+                return True
+        return False
+
+    def _fail(self) -> None:
+        """Unwind a failed farm without wedging: stop accepting input
+        (``svc`` raises once ``self.error`` is set), release workers parked
+        on their input lanes (closing them makes their ``pop`` raise after
+        the drain), and keep the result lanes draining so a worker blocked
+        mid-push can reach its EOS and exit."""
+        self._spmc.close_all()
+        deadline = time.monotonic() + 10.0
+        while not all(self._eos_seen) and time.monotonic() < deadline:
+            ok, got, lane = self._mpsc.try_pop_any()
+            if ok:
+                if got is EOS:
+                    self._eos_seen[lane] = True
+                continue
+            if all(self._eos_seen[i] or not p.is_alive()
+                   for i, p in enumerate(self._procs)):
+                break
+            time.sleep(1e-4)
+
+    # -- lifecycle -----------------------------------------------------------
+    def svc_init(self) -> int:
+        self._collector = threading.Thread(target=self._collect, daemon=True,
+                                           name=f"{self._label}-collector")
+        self._collector.start()
+        return 0
+
+    def svc_end(self) -> None:
+        try:
+            for i in range(self._n):
+                if self._procs[i].is_alive() or not self._spmc.lanes[i].empty():
+                    try:
+                        self._spmc.lanes[i].push_eos(timeout=2.0)
+                    except (TimeoutError, QueueClosed):
+                        pass
+            if self._collector is not None:
+                self._collector.join(timeout=30.0)
+            for p in self._procs:
+                p.join(timeout=5.0)
+                if p.is_alive():
+                    p.terminate()
+        finally:
+            # errors stay on self.error (the runner's _error() walk finds
+            # them); raising here would only kill the node thread noisily
+            self._destroy()
+
+    def _destroy(self) -> None:
+        if not self._destroyed:
+            self._destroyed = True
+            self._spmc.destroy()
+            self._mpsc.destroy()
+
+    def __del__(self):
+        # a compiled-but-never-run or abandoned (e.g. run() timed out and
+        # the runner was discarded) node must still release its segments
+        try:
+            if self._destroyed:
+                return
+            self._spmc.close_all()      # parked workers drain, then exit
+            for p in self._procs:
+                p.join(timeout=1.0)
+                if p.is_alive():
+                    p.terminate()
+            self._destroy()
+        except Exception:   # noqa: BLE001 - interpreter teardown
+            pass
+
+    # -- stats ---------------------------------------------------------------
+    def node_stats(self) -> dict:
+        return {
+            "node": self._label,
+            "backend": "process",
+            "workers": self._n,
+            "items": self._seq,
+            "delivered": self._delivered,
+            "routed_per_worker": list(self._routed),
+            "svc_time_ema_s": self.svc_time_ema,
+            "max_lane_depth": max((l.max_depth for l in self._spmc.lanes),
+                                  default=0),
+        }

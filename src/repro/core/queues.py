@@ -3,14 +3,22 @@
 FastFlow's first layer is a lock-free SPSC ring buffer on shared memory; its
 second layer composes SPMC/MPSC/MPMC networks out of SPSC queues.  On the host
 side of this framework the same structure carries data-pipeline batches and
-serving requests.  CPython's GIL makes single-word index updates atomic, so the
-single-producer/single-consumer ring below is wait-free in the same sense as
-FastFlow's: the producer only writes ``_tail``, the consumer only writes
-``_head``, and neither takes a lock on the fast path.
+serving requests.  This module is the *thread-tier* instance: CPython's GIL
+makes single-word index updates atomic, so the ring below is wait-free in the
+same sense as FastFlow's — the producer only writes ``_tail``, the consumer
+only writes ``_head``, and neither takes a lock on the fast path.
 
-The device-side analogue of these channels (collective_permute ring edges,
-Pallas double-buffered VMEM tiles) lives in ``core/device.py`` and
-``kernels/``.
+The host tier has three backends, all carrying the same channel structure:
+
+- **threads** (this module): cheapest hop; real parallelism only for stages
+  that release the GIL (I/O, large BLAS calls, jitted device dispatch);
+- **processes** (``core/shm.py``): the same fixed-slot SPSC ring laid out in
+  ``multiprocessing.shared_memory`` — FastFlow's actual multicore story —
+  so CPU-bound Python/numpy stages scale with cores; the staged compiler's
+  ``place`` pass picks it from a measured GIL-sensitivity signal and
+  startup-calibrated hop costs (``perf_model.calibrate``);
+- **device** (``core/device.py``, ``kernels/``): collective_permute ring
+  edges and Pallas double-buffered VMEM tiles, the mesh-side analogue.
 """
 
 from __future__ import annotations
@@ -40,6 +48,7 @@ class SPSCQueue:
         self._head = 0  # consumer-owned
         self._tail = 0  # producer-owned
         self._closed = False
+        self.max_depth = 0              # producer-side high-water mark
 
     # -- non-blocking primitives (the lock-free layer) ----------------------
     def try_push(self, item: Any) -> bool:
@@ -48,6 +57,9 @@ class SPSCQueue:
             return False
         self._buf[self._tail] = item
         self._tail = nxt                # single atomic publish
+        depth = (nxt - self._head) % self._cap
+        if depth > self.max_depth:
+            self.max_depth = depth
         return True
 
     def try_pop(self) -> tuple[bool, Any]:
@@ -72,9 +84,13 @@ class SPSCQueue:
     def push(self, item: Any, timeout: Optional[float] = None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
         delay = 1e-6
-        while not self.try_push(item):
+        while True:
+            # closed first: a closed queue refuses new items even when slots
+            # remain (the stream is ended; accepting would strand the item)
             if self._closed:
                 raise QueueClosed("push to closed queue")
+            if self.try_push(item):
+                return
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("SPSC push timed out")
             time.sleep(delay)
@@ -96,6 +112,14 @@ class SPSCQueue:
 
     def close(self) -> None:
         self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def drained(self) -> bool:
+        """Closed with nothing left to pop."""
+        return self._closed and self._head == self._tail
 
 
 class SPMCQueue:
@@ -137,6 +161,12 @@ class SPMCQueue:
         for lane in self.lanes:
             lane.push(item, timeout)
 
+    def close_all(self) -> None:
+        """Close every lane: consumers drain what is queued, then their
+        ``pop`` raises :class:`QueueClosed`; further pushes are refused."""
+        for lane in self.lanes:
+            lane.close()
+
 
 class MPSCQueue:
     """Multiple producers, single consumer: one SPSC lane per producer; the
@@ -166,10 +196,18 @@ class MPSCQueue:
             ok, item, i = self.try_pop_any()
             if ok:
                 return item, i
+            if all(lane.drained() for lane in self.lanes):
+                raise QueueClosed("pop from closed and drained MPSC network")
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("MPSC pop timed out")
             time.sleep(delay)
             delay = min(delay * 2, 1e-3)
+
+    def close_all(self) -> None:
+        """Close every producer lane; once drained, ``pop_any`` raises
+        :class:`QueueClosed` instead of spinning to ``TimeoutError``."""
+        for lane in self.lanes:
+            lane.close()
 
 
 class MPMCQueue:
@@ -197,7 +235,18 @@ class MPMCQueue:
                 if ok:
                     self._next[consumer] = (i + 1) % n_prod
                     return item, i
+            if all(row[consumer].drained() for row in self.grid):
+                raise QueueClosed(
+                    "pop from closed and drained MPMC column")
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("MPMC pop timed out")
             time.sleep(delay)
             delay = min(delay * 2, 1e-3)
+
+    def close_all(self) -> None:
+        """Close every lane in the grid; a consumer whose column is closed
+        and drained gets :class:`QueueClosed` from ``pop`` instead of
+        spinning to ``TimeoutError``."""
+        for row in self.grid:
+            for lane in row:
+                lane.close()

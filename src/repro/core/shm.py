@@ -1,0 +1,375 @@
+"""L1/L2 — true shared-memory channels for the process-backed host tier.
+
+``core/queues.py`` carries the thread-backed host tier; its rings are Python
+lists, so they cannot cross a process boundary and its CPU-bound producers
+serialize on the GIL.  This module is the same FastFlow layer-1 structure on
+``multiprocessing.shared_memory``: a fixed-slot single-producer /
+single-consumer ring whose indices live *in* the shared segment, with the
+same wait-free single-writer discipline — the producer only writes ``tail``,
+the consumer only writes ``head``, each as one aligned 8-byte store (a single
+memcpy in CPython, atomic on every platform we target), so neither side ever
+takes a lock on the fast path.
+
+Payload encoding per slot:
+
+- **ndarray fast path** (tag ``ARR``): dtype/shape header plus the raw data
+  bytes copied straight into the slot — no pickling of the buffer;
+- **pickle fallback** (tag ``PKL``): arbitrary pytrees / Python objects as
+  pickled bytes;
+- **control tags**: ``EOS`` (end-of-stream; decoded back to the module-wide
+  :data:`~repro.core.node.EOS` sentinel so identity checks keep working
+  across the boundary) and ``ERR`` (a pickled error record from a worker).
+
+Layer 2 composes the same SPMC / MPSC lane bundles as ``core/queues.py`` out
+of these rings — the emitter/collector wiring of a process farm.
+"""
+
+from __future__ import annotations
+
+import pickle
+import struct
+import time
+from multiprocessing import shared_memory
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from .node import EOS
+from .queues import QueueClosed
+
+# ring header: producer / consumer indices on separate cache lines, plus the
+# closed flag (written by the producer, read by both sides)
+_OFF_TAIL = 0
+_OFF_HEAD = 64
+_OFF_CLOSED = 128
+_HEADER = 192
+
+_SLOT_HDR = 16           # u32 payload length | u8 tag | padding
+
+TAG_PKL = 0
+TAG_ARR = 1
+TAG_EOS = 2
+TAG_ERR = 3
+
+
+class ShmError:
+    """A worker-side failure shipped through the ring (tag ``ERR``)."""
+
+    __slots__ = ("worker", "exc", "tb")
+
+    def __init__(self, worker: int, exc: str, tb: str):
+        self.worker = worker
+        self.exc = exc
+        self.tb = tb
+
+    def __repr__(self) -> str:
+        return f"ShmError(worker={self.worker}, exc={self.exc!r})"
+
+
+def _unregister_tracker(name: str) -> None:
+    # attaching registers the segment with this process's resource_tracker,
+    # which would unlink it when the attacher exits; only the creator owns
+    # the segment's lifetime
+    try:
+        from multiprocessing import resource_tracker
+        resource_tracker.unregister("/" + name, "shared_memory")
+    except Exception:   # noqa: BLE001 - best effort, platform-dependent
+        pass
+
+
+class ShmSPSCQueue:
+    """Bounded SPSC ring over one shared-memory segment.
+
+    Same surface as :class:`~repro.core.queues.SPSCQueue` (``try_push`` /
+    ``try_pop`` / blocking wrappers / ``close``), crossing a process
+    boundary.  The object is picklable: unpickling (or ``attach``) maps the
+    same segment by name, so a ``fork``- or ``spawn``-started worker sees the
+    identical ring.  Only the creating process may ``unlink``.
+    """
+
+    def __init__(self, capacity: int = 64, slot_bytes: int = 1 << 16,
+                 name: Optional[str] = None, _create: bool = True):
+        if capacity < 2:
+            raise ValueError("capacity must be >= 2")
+        self._cap = capacity
+        self._slot = slot_bytes
+        self._stride = _SLOT_HDR + slot_bytes
+        self._creator = _create
+        self.max_depth = 0          # producer-side observation, process-local
+        size = _HEADER + capacity * self._stride
+        if _create:
+            self._shm = shared_memory.SharedMemory(create=True, size=size)
+        else:
+            self._shm = shared_memory.SharedMemory(name=name)
+            _unregister_tracker(self._shm.name)
+        self._buf = self._shm.buf
+
+    # -- pickling: reattach by name -----------------------------------------
+    def __getstate__(self):
+        return {"capacity": self._cap, "slot_bytes": self._slot,
+                "name": self._shm.name}
+
+    def __setstate__(self, state):
+        self.__init__(state["capacity"], state["slot_bytes"],
+                      name=state["name"], _create=False)
+
+    @property
+    def name(self) -> str:
+        return self._shm.name
+
+    @property
+    def capacity(self) -> int:
+        return self._cap - 1
+
+    # -- shared-index helpers ------------------------------------------------
+    def _load(self, off: int) -> int:
+        return int.from_bytes(self._buf[off:off + 8], "little")
+
+    def _store(self, off: int, v: int) -> None:
+        self._buf[off:off + 8] = v.to_bytes(8, "little")
+
+    def __len__(self) -> int:
+        return (self._load(_OFF_TAIL) - self._load(_OFF_HEAD)) % self._cap
+
+    def empty(self) -> bool:
+        return self._load(_OFF_TAIL) == self._load(_OFF_HEAD)
+
+    @property
+    def closed(self) -> bool:
+        return self._buf[_OFF_CLOSED] != 0
+
+    def close(self) -> None:
+        self._buf[_OFF_CLOSED] = 1
+
+    def drained(self) -> bool:
+        """Closed with nothing left to pop."""
+        return self.closed and self.empty()
+
+    # -- encode / decode -----------------------------------------------------
+    def _encode(self, base: int, tag: int, obj: Any) -> None:
+        if tag == TAG_ARR:
+            dt = obj.dtype.str.encode("ascii")
+            meta = struct.pack("<BB", obj.ndim, len(dt)) + dt \
+                + struct.pack(f"<{obj.ndim}q", *obj.shape)
+            payload_len = len(meta) + obj.nbytes
+            if payload_len > self._slot:
+                raise ValueError(
+                    f"array of {obj.nbytes}B exceeds the {self._slot}B shm "
+                    "slot; raise slot_bytes= on the ring")
+            off = base + _SLOT_HDR
+            self._buf[off:off + len(meta)] = meta
+            off += len(meta)
+            self._buf[off:off + obj.nbytes] = memoryview(obj).cast("B")
+        elif tag in (TAG_PKL, TAG_ERR):
+            payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+            payload_len = len(payload)
+            if payload_len > self._slot:
+                raise ValueError(
+                    f"pickled item of {payload_len}B exceeds the "
+                    f"{self._slot}B shm slot; raise slot_bytes= on the ring")
+            off = base + _SLOT_HDR
+            self._buf[off:off + payload_len] = payload
+        else:                       # TAG_EOS
+            payload_len = 0
+        struct.pack_into("<IB", self._buf, base, payload_len, tag)
+
+    def _decode(self, base: int) -> Any:
+        payload_len, tag = struct.unpack_from("<IB", self._buf, base)
+        off = base + _SLOT_HDR
+        if tag == TAG_EOS:
+            return EOS
+        if tag == TAG_ARR:
+            ndim, dlen = struct.unpack_from("<BB", self._buf, off)
+            off += 2
+            dtype = np.dtype(bytes(self._buf[off:off + dlen]).decode("ascii"))
+            off += dlen
+            shape = struct.unpack_from(f"<{ndim}q", self._buf, off)
+            off += 8 * ndim
+            nbytes = int(dtype.itemsize * int(np.prod(shape, dtype=np.int64))) \
+                if ndim else dtype.itemsize
+            # bytes() copies out of the slot before the producer reuses it
+            return np.frombuffer(bytes(self._buf[off:off + nbytes]),
+                                 dtype=dtype).reshape(shape)
+        obj = pickle.loads(bytes(self._buf[off:off + payload_len]))
+        return obj
+
+    # -- non-blocking primitives (the lock-free layer) -----------------------
+    def _try_push_tag(self, tag: int, obj: Any) -> bool:
+        tail = self._load(_OFF_TAIL)
+        head = self._load(_OFF_HEAD)
+        nxt = (tail + 1) % self._cap
+        if nxt == head:             # full
+            return False
+        self._encode(_HEADER + tail * self._stride, tag, obj)
+        self._store(_OFF_TAIL, nxt)     # single atomic publish
+        depth = (nxt - head) % self._cap
+        if depth > self.max_depth:
+            self.max_depth = depth
+        return True
+
+    def try_push(self, item: Any) -> bool:
+        # the raw-slab path only fits plain dtypes: structured dtypes
+        # collapse to void under dtype.str (field names lost) and object
+        # dtypes have no flat buffer — both must ride the pickle path
+        if isinstance(item, np.ndarray) and item.dtype.names is None \
+                and item.dtype.kind != "O":
+            a = np.ascontiguousarray(item)
+            try:
+                return self._try_push_tag(TAG_ARR, a)
+            except ValueError:
+                return self._try_push_tag(TAG_PKL, item)
+        return self._try_push_tag(TAG_PKL, item)
+
+    def try_pop(self) -> Tuple[bool, Any]:
+        head = self._load(_OFF_HEAD)
+        if head == self._load(_OFF_TAIL):   # empty
+            return False, None
+        item = self._decode(_HEADER + head * self._stride)
+        self._store(_OFF_HEAD, (head + 1) % self._cap)
+        return True, item
+
+    # -- blocking wrappers ---------------------------------------------------
+    def push(self, item: Any, timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        delay = 1e-6
+        while True:
+            # same discipline as the thread tier: a closed queue refuses new
+            # items even when slots remain
+            if self.closed:
+                raise QueueClosed("push to closed shm queue")
+            if self.try_push(item):
+                return
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("shm SPSC push timed out")
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-3)
+
+    def pop(self, timeout: Optional[float] = None) -> Any:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        delay = 1e-6
+        while True:
+            ok, item = self.try_pop()
+            if ok:
+                return item
+            if self.closed:
+                raise QueueClosed("pop from closed empty shm queue")
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("shm SPSC pop timed out")
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-3)
+
+    def push_eos(self, timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        delay = 1e-6
+        while not self._try_push_tag(TAG_EOS, None):
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("shm SPSC push_eos timed out")
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-3)
+
+    def push_err(self, err: ShmError, timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        delay = 1e-6
+        while not self._try_push_tag(TAG_ERR, err):
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("shm SPSC push_err timed out")
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-3)
+
+    # -- segment lifetime ----------------------------------------------------
+    def detach(self) -> None:
+        try:
+            self._buf = None
+            self._shm.close()
+        except Exception:   # noqa: BLE001 - already detached
+            pass
+
+    def destroy(self) -> None:
+        """Release the segment (creator only; attachers just detach)."""
+        self.detach()
+        if self._creator:
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:
+                pass
+
+
+class ShmSPMCQueue:
+    """Single producer, multiple consumer *processes*: one shm SPSC lane per
+    consumer, round-robin by default (mirrors
+    :class:`~repro.core.queues.SPMCQueue`)."""
+
+    def __init__(self, n_consumers: int, capacity: int = 64,
+                 slot_bytes: int = 1 << 16):
+        self.lanes = [ShmSPSCQueue(capacity, slot_bytes)
+                      for _ in range(n_consumers)]
+        self._rr = 0
+
+    def push_to(self, idx: int, item: Any,
+                timeout: Optional[float] = None) -> None:
+        self.lanes[idx].push(item, timeout)
+
+    def push_rr(self, item: Any, timeout: Optional[float] = None) -> int:
+        idx = self._rr
+        self.lanes[idx].push(item, timeout)
+        self._rr = (self._rr + 1) % len(self.lanes)
+        return idx
+
+    def broadcast_eos(self) -> None:
+        for lane in self.lanes:
+            lane.push_eos()
+
+    def close_all(self) -> None:
+        for lane in self.lanes:
+            lane.close()
+
+    def destroy(self) -> None:
+        for lane in self.lanes:
+            lane.destroy()
+
+
+class ShmMPSCQueue:
+    """Multiple producer processes, single consumer: one shm SPSC lane per
+    producer, drained fairly (mirrors
+    :class:`~repro.core.queues.MPSCQueue`)."""
+
+    def __init__(self, n_producers: int, capacity: int = 64,
+                 slot_bytes: int = 1 << 16):
+        self.lanes = [ShmSPSCQueue(capacity, slot_bytes)
+                      for _ in range(n_producers)]
+        self._next = 0
+
+    def lane(self, idx: int) -> ShmSPSCQueue:
+        return self.lanes[idx]
+
+    def try_pop_any(self) -> Tuple[bool, Any, int]:
+        n = len(self.lanes)
+        for off in range(n):
+            i = (self._next + off) % n
+            ok, item = self.lanes[i].try_pop()
+            if ok:
+                self._next = (i + 1) % n
+                return True, item, i
+        return False, None, -1
+
+    def pop_any(self, timeout: Optional[float] = None) -> Tuple[Any, int]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        delay = 1e-6
+        while True:
+            ok, item, i = self.try_pop_any()
+            if ok:
+                return item, i
+            if all(lane.drained() for lane in self.lanes):
+                raise QueueClosed("pop from closed and drained shm MPSC")
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("shm MPSC pop timed out")
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-3)
+
+    def close_all(self) -> None:
+        for lane in self.lanes:
+            lane.close()
+
+    def destroy(self) -> None:
+        for lane in self.lanes:
+            lane.destroy()

@@ -262,6 +262,20 @@ class Skeleton:
     def ffStats(self) -> dict:
         return {}
 
+    def stats(self) -> dict:
+        """Structured runtime stats (per-node service-time EMA, items
+        processed, max observed lane depth) for ``runner.stats()``."""
+        return {"type": type(self).__name__.lower()}
+
+
+def _stat_of(x: Any) -> dict:
+    """Stats for one network member: an FFNode or a nested Skeleton."""
+    if isinstance(x, FFNode):
+        return x.node_stats()
+    if isinstance(x, Skeleton):
+        return x.stats()
+    return {}
+
 
 def _as_runnable(obj) -> "Skeleton | FFNode":
     if isinstance(obj, (Skeleton, FFNode)):
@@ -322,6 +336,11 @@ class Pipeline(Skeleton):
     def ffStats(self) -> dict:
         return {f"stage{i}": getattr(s, "svc_calls", None)
                 for i, s in enumerate(self._stages)}
+
+    def stats(self) -> dict:
+        return {"type": "pipeline",
+                "stages": [_stat_of(s) for s in self._stages],
+                "lane_max_depth": [q.max_depth for q in self._qs]}
 
 
 # ---------------------------------------------------------------------------
@@ -499,6 +518,21 @@ class Farm(Skeleton):
             "collector_calls": getattr(self._collector, "svc_calls", None),
         }
 
+    def stats(self) -> dict:
+        out = {"type": "farm",
+               "workers": [_stat_of(w) for w in self._workers]}
+        if self._emitter is not None:
+            out["emitter"] = _stat_of(self._emitter)
+        if self._collector is not None:
+            out["collector"] = _stat_of(self._collector)
+        spmc = getattr(self, "_spmc", None)
+        mpsc = getattr(self, "_mpsc", None)
+        out["lane_max_depth"] = \
+            [l.max_depth for l in spmc.lanes] if spmc else []
+        out["result_lane_max_depth"] = \
+            [l.max_depth for l in mpsc.lanes] if mpsc else []
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Map skeleton on the farm template (paper Sec. 12.1)
@@ -554,3 +588,7 @@ class FFMap(Skeleton):
         self._exec._join(timeout)
         self._t1 = time.perf_counter()
         return -1 if self._exec._error() is not None else 0
+
+    def stats(self) -> dict:
+        return {"type": "map", **{k: v for k, v in self._exec.stats().items()
+                                  if k != "type"}}

@@ -2,7 +2,7 @@
 
 A building-blocks pipeline feeds the training loop:
 
-    pipeline( Reader source, DevicePut stage[, compute stage] )
+    pipeline( Reader source, DevicePut stage[, compute stage/farm] )
 
 compiled through the staged graph compiler (``FFGraph.compile``): the reader
 and device-put boundary stay host-placed (stateful nodes over SPSC queues),
@@ -10,6 +10,14 @@ and an optional pure ``compute`` stage — e.g. tokenization-as-a-matmul or
 augmentation with declared ``ff_flops`` — is cost-placed onto the mesh, so a
 single graph runs as a *hybrid* plan: reader threads feeding a sharded
 compute farm through device-put boundary nodes.
+
+With ``compute_workers > 1`` the compute stage becomes a *process-placed
+farm*: OS-process workers over shared-memory SPSC lanes
+(``core.process.ProcessFarmNode``), so CPU-bound augmentation scales with
+cores instead of serializing on the GIL.  The process farm's collector is
+sequence-ordered, which is what licenses farming here at all — the training
+loop consumes an ordered stream and the checkpoint cursor assumes it (a
+*thread* farm's collector is arrival-ordered and must keep width 1).
 
 The runner's bounded results queue provides back-pressure (the device never
 waits on the host unless the host truly falls behind — and the host can
@@ -19,11 +27,12 @@ lanes.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import jax
 
-from ..core.graph import FFGraph, pipeline as ff_pipeline, seq as ff_seq
+from ..core.graph import (FFGraph, farm as ff_farm, pipeline as ff_pipeline,
+                          seq as ff_seq)
 from ..core.node import FFNode
 
 
@@ -62,20 +71,34 @@ class DataPipeline:
 
     def __init__(self, source, shardings=None, n_batches: Optional[int] = None,
                  prefetch: int = 2, compute: Optional[Callable] = None,
-                 plan=None):
+                 plan=None, compute_workers: Union[int, str] = 1,
+                 shm_slot_bytes: int = 1 << 20):
         self.source = source
-        stages = [_ReaderNode(source, n_batches), _DevicePutNode(shardings)]
-        if compute is not None:
-            # a pure seq stage, NOT a farm: the training loop consumes an
-            # ordered stream and the checkpoint cursor assumes it — a host
-            # farm's collector is arrival-ordered, so width must stay 1 here;
-            # both the host FnNode and the device boundary node are FIFO
-            stages.append(ff_seq(compute, pure=True))
+        placements = None
+        if compute is not None and compute_workers not in (None, 1):
+            # a farm is only admissible here when its collector keeps the
+            # stream ordered (the training loop and checkpoint cursor assume
+            # it): the process tier reorders by sequence number, so pin the
+            # stage there — thread farms stay width 1.  The farm sits
+            # *before* the device-put boundary: worker processes transform
+            # raw numpy batches; only the parent touches the mesh.
+            stages = [_ReaderNode(source, n_batches),
+                      ff_farm(compute, n=compute_workers),
+                      _DevicePutNode(shardings)]
+            placements = {compute: "host_process"}
+        else:
+            stages = [_ReaderNode(source, n_batches),
+                      _DevicePutNode(shardings)]
+            if compute is not None:
+                # single pure seq stage: both the host FnNode and the device
+                # boundary node are FIFO
+                stages.append(ff_seq(compute, pure=True))
         self.graph: FFGraph = ff_pipeline(*stages)
         self._runner = self.graph.compile(
             plan if compute is not None else None,
             capacity=max(2, prefetch), results_capacity=max(2, prefetch),
-            device_batch=1)
+            device_batch=1, placements=placements,
+            shm_slot_bytes=shm_slot_bytes)
         self.placements = getattr(self._runner, "placements", [])
         self._started = False
 
@@ -92,20 +115,31 @@ class DataPipeline:
         # restore; the source cursor is saved *behind* the prefetch depth.
         return self.source.state()
 
+    def stats(self) -> dict:
+        """Runner stats: per-node service-time EMA, items, lane depths."""
+        return self._runner.stats()
+
     def stop(self) -> None:
         # drain: sources are finite or the process exits with daemon threads
         pass
 
 
 def make_pipeline(source, plan=None, n_batches=None, prefetch: int = 2,
-                  compute: Optional[Callable] = None) -> DataPipeline:
+                  compute: Optional[Callable] = None,
+                  compute_workers: Union[int, str] = 1) -> DataPipeline:
     shardings = None
     if plan is not None:
         st = source.state()          # peek one batch without consuming it
         probe = source.next_batch()
         source.restore(st)
+        if compute is not None and compute_workers not in (None, 1):
+            # the process farm runs *before* the device-put boundary, so
+            # the shardings must fit compute's output (it may change keys
+            # or shapes), not the raw source batch
+            probe = compute(probe)
         shardings = {
             k: plan.sharding_for(("batch",) + (None,) * (v.ndim - 1), v.shape)
             for k, v in probe.items()}
     return DataPipeline(source, shardings, n_batches, prefetch,
-                        compute=compute, plan=plan).start()
+                        compute=compute, plan=plan,
+                        compute_workers=compute_workers).start()

@@ -7,6 +7,7 @@ accelerator API.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -61,6 +62,8 @@ def main():
     dt = time.perf_counter() - t0
     print(f"served {args.requests} requests, {total_toks} tokens in "
           f"{dt:.2f}s ({total_toks/dt:.1f} tok/s); decode steps={eng.steps}")
+    print("engine graph stats (svc-time EMA / items / lane depths):")
+    print("  " + json.dumps(eng.stats(), default=str))
 
 
 if __name__ == "__main__":

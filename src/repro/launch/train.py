@@ -10,6 +10,7 @@ this container it drives the single CPU device through the same code path.
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 
@@ -62,6 +63,8 @@ def main():
     print(f"final step {out['final_step']}: loss {losses[0]:.3f} -> "
           f"{losses[-1]:.3f}; restarts={out['restarts']} "
           f"stragglers={out['stragglers']}")
+    print("data graph stats (svc-time EMA / items / lane depths):")
+    print("  " + json.dumps(pipe.stats(), default=str))
 
 
 if __name__ == "__main__":

@@ -238,6 +238,10 @@ class InferenceEngine:
     def error(self) -> Optional[BaseException]:
         return self._runner.error()
 
+    def stats(self) -> dict:
+        """Runner stats: per-node service-time EMA, items, lane depths."""
+        return self._runner.stats()
+
     # -- caches -----------------------------------------------------------------
     def _insert_impl(self, caches, new_cache, cur_tok, pos, slot, tok, p):
         """Write a single prefilled (B=1) cache into slot ``slot``."""

@@ -1,0 +1,332 @@
+"""The process-backed host tier: three-way placement parity, crash
+surfacing, runner stats, and the calibrated cost model (PR 3)."""
+
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CostEstimate, FFNode, GraphError, HostRunner,
+                        Placement, ProcessFarmNode, ProcessRunner,
+                        WorkerCrashed, annotate, farm, perf_model as pm,
+                        pipeline)
+from repro.core.process import fn_picklable
+
+
+class Gen(FFNode):
+    def __init__(self, n):
+        super().__init__()
+        self.i, self.n = 0, n
+
+    def svc(self, _):
+        self.i += 1
+        return np.float32(self.i) if self.i <= self.n else None
+
+
+def _affine(x):
+    return x * 2.0 + 1.0
+
+
+def _gil_bound(x):
+    # interpreter-driven numpy-scalar loop: never releases the GIL
+    s = 0.0
+    v = float(x)
+    for i in range(12_000):
+        s += (v * i + 1.1) % 7.3
+    return np.float32(s % 1000.0)
+
+
+def _kill_on_five(x):
+    if int(x) == 5:
+        os.kill(os.getpid(), signal.SIGKILL)
+    return float(x)
+
+
+# -- three-way parity ----------------------------------------------------------
+@pytest.mark.shm
+def test_farm_parity_thread_process_device(plan):
+    heavy = lambda x: x * 2.0 + 1.0
+    heavy.ff_flops = 1e9
+
+    n = 11
+    expected = [i * 2.0 + 1.0 for i in range(1, n + 1)]
+
+    host = pipeline(Gen(n), farm(heavy, n=2)).compile(mode="host").run()
+    proc = pipeline(Gen(n), farm(heavy, n=2)).compile(mode="process").run()
+    if plan is not None:                    # device skipped on CPU-less CI
+        dev = pipeline(Gen(n), farm(heavy, n=2)).compile(
+            plan, device_batch=4).run()
+        # the process farm reorders by sequence number and the device path
+        # is batch-ordered: both must match the input order exactly
+        assert [float(v) for v in dev] == pytest.approx(expected)
+    assert [float(v) for v in proc] == pytest.approx(expected)
+    # the thread farm's collector is arrival-ordered: same multiset
+    assert sorted(float(v) for v in host) == pytest.approx(expected)
+
+
+@pytest.mark.shm
+def test_pipeline_parity_all_three_backends_exact_order(plan):
+    # seq stages are FIFO on every backend -> exact order everywhere
+    f1 = lambda x: x + 1.0
+    f2 = lambda x: x * 3.0
+    f1.ff_flops = 1e9
+    f2.ff_flops = 1e9
+    xs = [np.float32(i) for i in range(9)]
+    expected = [(i + 1.0) * 3.0 for i in range(9)]
+
+    host = pipeline(f1, f2).compile(mode="host").run(xs)
+    proc = pipeline(f1, f2).compile(mode="process").run(xs)
+    assert [float(v) for v in host] == pytest.approx(expected)
+    assert [float(v) for v in proc] == pytest.approx(expected)
+    if plan is not None:
+        dev = pipeline(f1, f2).compile(plan, mode="device").run(xs)
+        assert [float(v) for v in dev] == pytest.approx(expected)
+
+
+@pytest.mark.shm
+def test_a2a_parity_process_mode_falls_back_to_threads(plan):
+    # all_to_all has no process lowering: mode="process" keeps it on
+    # threads (recorded in the placement reason) with identical results
+    lefts = [lambda x: x * 10.0, lambda x: x + 1.0]
+    rights = [lambda y: y - 1.0, lambda y: y * 2.0]
+    xs = [np.float32(i) for i in range(10)]
+
+    from repro.core import all_to_all
+    host = sorted(float(v) for v in
+                  all_to_all(lefts, rights).compile(mode="host").run(xs))
+    r = all_to_all(lefts, rights).compile(mode="process")
+    assert all(p.target == "host" for _, p in r.placements)
+    assert any("process" in p.reason for _, p in r.placements)
+    proc = sorted(float(v) for v in r.run(xs))
+    assert host == proc
+    if plan is not None:
+        dev = sorted(float(v) for v in all_to_all(lefts, rights).compile(
+            plan, mode="device").run(xs))
+        assert host == dev
+
+
+@pytest.mark.shm
+def test_process_farm_with_absorbed_emitter_collector():
+    # normalize absorbs the pure neighbours into the farm; the process
+    # lowering runs them in the parent around the shm hop
+    n = 8
+    r = pipeline(Gen(n), lambda x: x + 0.5, farm(_affine, n=2),
+                 lambda y: y - 1.0).compile(mode="process")
+    assert isinstance(r, ProcessRunner)
+    out = [float(v) for v in r.run()]
+    assert out == pytest.approx(
+        [(i + 0.5) * 2.0 + 1.0 - 1.0 for i in range(1, n + 1)])
+
+
+# -- crash surfacing -----------------------------------------------------------
+@pytest.mark.shm
+def test_crashed_process_worker_surfaces_error_not_wedge():
+    r = pipeline(Gen(10), farm(_kill_on_five, n=2)).compile(mode="process")
+    t0 = time.monotonic()
+    with pytest.raises(WorkerCrashed):
+        r.run(timeout=60.0)
+    assert time.monotonic() - t0 < 60.0
+
+    err = r.error()
+    assert isinstance(err, WorkerCrashed)
+    assert "died" in str(err)
+
+
+@pytest.mark.shm
+def test_long_stream_with_poisoned_item_unwinds_not_wedges():
+    """Regression: a stream much longer than the ring capacity must still
+    surface the worker error — the farm has to stop feeding and drain the
+    survivors instead of spinning on their full lanes forever."""
+    def boom(x):
+        if int(x) == 3:
+            raise ValueError("poisoned item")
+        return float(x)
+
+    r = pipeline(Gen(400), farm(boom, n=2)).compile(mode="process")
+    t0 = time.monotonic()
+    with pytest.raises(WorkerCrashed) as ei:
+        r.run(timeout=60.0)
+    assert time.monotonic() - t0 < 45.0
+    assert "ValueError" in str(ei.value)
+
+
+@pytest.mark.shm
+def test_worker_exception_ships_back_with_traceback():
+    def boom(x):
+        if int(x) == 3:
+            raise ValueError("poisoned item")
+        return float(x)
+
+    r = pipeline(Gen(6), farm(boom, n=2)).compile(mode="process")
+    with pytest.raises(WorkerCrashed) as ei:
+        r.run(timeout=60.0)
+    assert "ValueError" in str(ei.value)
+
+
+# -- placement rules and overrides ---------------------------------------------
+def test_host_process_override_on_stateful_farm_rejected():
+    class St(FFNode):
+        def svc(self, t):
+            return t
+
+    with pytest.raises(GraphError):
+        pipeline(Gen(3), farm([St()])).compile(
+            placements={1: "host_process"})
+
+
+def test_bad_placement_target_still_rejected():
+    with pytest.raises(GraphError):
+        pipeline(Gen(3), farm(_affine, n=2)).compile(
+            placements={1: Placement(target="gpu")})
+
+
+@pytest.mark.shm
+def test_process_override_by_worker_object():
+    n = 6
+    r = pipeline(Gen(n), farm(_affine, n=2)).compile(
+        placements={_affine: "host_process"})
+    assert isinstance(r, ProcessRunner)
+    assert [p.target for _, p in r.placements][1] == "host_process"
+    out = [float(v) for v in r.run()]
+    assert out == pytest.approx([i * 2.0 + 1.0 for i in range(1, n + 1)])
+
+
+def test_fn_picklable_helper():
+    assert fn_picklable(_affine)
+    assert fn_picklable(len)
+
+
+# -- calibration + cost-driven auto choice (acceptance criterion) --------------
+@pytest.mark.shm
+def test_calibrate_measures_and_caches(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FF_CALIB_CACHE", str(tmp_path / "calib.json"))
+    pm.reset_calibration()
+    c = pm.calibrate()
+    assert c.source == "measured"
+    assert c.peak_flops > 1e8
+    assert 0 < c.queue_hop_s < 1e-2
+    assert 0 < c.proc_hop_s < 1e-1
+    assert 0 < c.device_dispatch_s < 1.0
+    # a fresh lookup in the same machine state loads the cached file
+    pm.reset_calibration()
+    c2 = pm.get_calibration()
+    assert c2.source == "cached"
+    assert c2.proc_hop_s == pytest.approx(c.proc_hop_s)
+    pm.reset_calibration()
+
+
+@pytest.mark.shm
+def test_auto_place_picks_process_for_gil_bound_farm():
+    """compile() with no placement overrides must choose host_process for a
+    CPU-bound numpy farm, from calibrated (not baked-in) constants."""
+    g = pipeline(Gen(4), farm(_gil_bound, n=2))
+    r = g.compile(sample=np.float32(1.0))
+    farm_placement = [p for d, p in r.placements if "farm" in d][0]
+    assert farm_placement.target == "host_process"
+    assert "calibrated" in farm_placement.reason
+    assert pm.get_calibration().source in ("measured", "cached")
+    out = r.run()
+    assert len(out) == 4
+
+
+def test_annotate_gil_probe_flags_bound_worker():
+    g = farm(_gil_bound, n=2).optimize()
+    annotate(g, sample=np.float32(1.0))
+    assert g.root.cost.source == "measured"
+    assert g.root.cost.releases_gil is False
+
+
+def test_declared_ff_releases_gil_wins_over_probe():
+    def sleeper(x):
+        time.sleep(0.001)
+        return x
+    sleeper.ff_releases_gil = True
+
+    g = farm(sleeper, n=2).optimize()
+    annotate(g, sample=np.float32(1.0))
+    assert g.root.cost.releases_gil is True
+    # a GIL-releasing farm must NOT be process-placed by the cost model
+    c = g.root.cost
+    assert isinstance(c, CostEstimate)
+
+
+# -- runner stats ---------------------------------------------------------------
+def test_host_runner_stats_shapes():
+    r = pipeline(Gen(12), farm(_affine, n=2)).compile(mode="host")
+    r.run()
+    s = r.stats()
+    assert s["backend"] == "HostRunner"
+    g = s["graph"]
+    assert g["type"] == "pipeline"
+    gen_stats = g["stages"][0]
+    assert gen_stats["items"] == 13          # 12 items + the terminating call
+    assert gen_stats["svc_time_ema_s"] >= 0.0
+    farm_stats = g["stages"][1]
+    assert farm_stats["type"] == "farm"
+    assert sum(w["items"] for w in farm_stats["workers"]) == 12
+    assert len(farm_stats["lane_max_depth"]) == 2
+    assert max(farm_stats["lane_max_depth"]) >= 1
+
+
+@pytest.mark.shm
+def test_process_runner_stats_include_worker_routing():
+    r = pipeline(Gen(10), farm(_affine, n=2)).compile(mode="process")
+    r.run()
+    s = r.stats()
+    assert s["backend"] == "ProcessRunner"
+    node = [st for st in s["graph"]["stages"]
+            if st.get("backend") == "process"][0]
+    assert node["items"] == 10 and node["delivered"] == 10
+    assert sum(node["routed_per_worker"]) == 10
+    assert node["max_lane_depth"] >= 1
+
+
+def test_device_runner_stats(plan):
+    f = lambda x: x * 2.0
+    f.ff_flops = 1e9
+    r = pipeline(f).compile(plan, mode="device")
+    r.run([np.float32(i) for i in range(6)])
+    s = r.stats()
+    assert s["backend"] == "DeviceRunner"
+    assert s["items"] == 6 and s["batches"] == 1
+
+
+@pytest.mark.shm
+def test_shutdown_releases_abandoned_process_runner():
+    r = pipeline(farm(_affine, n=2)).compile(mode="process")
+    r.run_then_freeze()
+    r.offload(np.float32(1.0))
+    r.shutdown(timeout=30.0)
+    # the farm stage wound down: workers exited and segments were unlinked
+    nodes = [s for s in r._skel._stages
+             if isinstance(s, ProcessFarmNode)]
+    assert nodes and nodes[0]._destroyed
+    assert all(not p.is_alive() for p in nodes[0]._procs)
+
+
+# -- data pipeline: process-placed augment farm ---------------------------------
+def _augment(batch):
+    return {k: v * 2 for k, v in batch.items()}
+
+
+@pytest.mark.shm
+def test_data_pipeline_process_farm_keeps_order():
+    from repro.data import SyntheticLMSource, make_pipeline
+
+    ref_src = SyntheticLMSource(64, 16, 4, seed=0)
+    expected = [ref_src.next_batch() for _ in range(5)]
+
+    src = SyntheticLMSource(64, 16, 4, seed=0)
+    pipe = make_pipeline(src, None, n_batches=5, compute=_augment,
+                         compute_workers=2)
+    assert any(p.target == "host_process" for _, p in pipe.placements)
+    for i in range(5):
+        batch = pipe.get(timeout=60.0)
+        assert batch is not None
+        for k, v in batch.items():
+            np.testing.assert_array_equal(np.asarray(v),
+                                          expected[i][k] * 2)
+    assert pipe.get(timeout=60.0) is None       # end of stream
+    assert pipe.stats()["backend"] == "ProcessRunner"

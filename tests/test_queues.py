@@ -9,7 +9,8 @@ try:
 except ImportError:          # bare interpreter: deterministic cases still run
     given = settings = st = None
 
-from repro.core.queues import MPMCQueue, MPSCQueue, SPMCQueue, SPSCQueue
+from repro.core.queues import (MPMCQueue, MPSCQueue, QueueClosed, SPMCQueue,
+                               SPSCQueue)
 
 
 def test_spsc_basic():
@@ -114,3 +115,62 @@ def test_mpmc_routing():
     q.push(1, 1, "y")
     items = {q.pop(1)[0] for _ in range(2)}
     assert items == {"x", "y"}
+
+
+# -- close propagation (PR 3 satellite) ----------------------------------------
+def test_spsc_push_refused_on_closed_queue_with_space():
+    q = SPSCQueue(8)
+    q.push(1)
+    q.close()
+    assert len(q) == 1 and q.capacity == 7      # space remains...
+    with pytest.raises(QueueClosed):
+        q.push(2)                               # ...but the stream is ended
+    assert q.pop() == 1                         # queued items still drain
+    with pytest.raises(QueueClosed):
+        q.pop()
+    assert q.drained()
+
+
+def test_spmc_close_all_propagates_to_lanes():
+    q = SPMCQueue(3, 8)
+    q.push_rr("a")
+    q.close_all()
+    with pytest.raises(QueueClosed):
+        q.lanes[1].push("late")
+    assert q.lanes[0].pop() == "a"
+    for lane in q.lanes:
+        with pytest.raises(QueueClosed):
+            lane.pop()
+
+
+def test_mpsc_pop_any_raises_queueclosed_after_drain():
+    q = MPSCQueue(2, 8)
+    q.lane(0).push("a")
+    q.lane(1).push("b")
+    q.close_all()
+    got = {q.pop_any()[0], q.pop_any()[0]}      # drain first
+    assert got == {"a", "b"}
+    with pytest.raises(QueueClosed):            # then closed, not TimeoutError
+        q.pop_any(timeout=5.0)
+
+
+def test_mpmc_pop_raises_queueclosed_after_drain():
+    q = MPMCQueue(2, 2, 8)
+    q.push(0, 0, "x")
+    q.close_all()
+    assert q.pop(0)[0] == "x"
+    with pytest.raises(QueueClosed):
+        q.pop(0, timeout=5.0)
+    # the other consumer's column is empty and closed too
+    with pytest.raises(QueueClosed):
+        q.pop(1, timeout=5.0)
+
+
+def test_max_depth_high_water_mark():
+    q = SPSCQueue(8)
+    for i in range(5):
+        q.push(i)
+    for _ in range(5):
+        q.pop()
+    q.push(9)
+    assert q.max_depth == 5
