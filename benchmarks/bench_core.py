@@ -6,9 +6,15 @@ describes — speedup ~ nw for farms, service time ~ max stage for pipelines
 — independent of core count.  ``bench_farm_backends`` measures the
 multicore claim itself: a CPU-bound numpy farm as GIL-serialized threads vs
 as OS processes over shared-memory SPSC lanes (the process-backed host
-tier), recording the throughput ratio.  The device-level equivalents of
-these claims are exercised by the dry-run roofline instead
+tier), recording the throughput ratio; ``bench_a2a_backends`` does the same
+for ``all_to_all`` over the shm MPMC lane grid.  The device-level
+equivalents of these claims are exercised by the dry-run roofline instead
 (benchmarks/roofline.py).
+
+The ``--smoke`` JSON artifact carries machine-readable ``items_per_s`` /
+``ratio_best`` fields per metric; CI's bench-compare step fails the build
+when any of them regresses >30% against the committed
+``benchmarks/BENCH_baseline.json`` (see ``tools/bench_compare.py``).
 """
 
 from __future__ import annotations
@@ -201,7 +207,8 @@ def bench_hybrid_pipeline(smoke: bool = False):
         assert len(out) == n_items
         targets = "+".join(p.target for _, p in r.placements)
         rows.append((f"graph_pipeline_{label}", dt / n_items * 1e6,
-                     f"{n_items/dt:.0f}items/s placements={targets}"))
+                     f"{n_items/dt:.0f}items/s placements={targets}",
+                     {"items_per_s": round(n_items / dt, 1)}))
     return rows
 
 
@@ -275,8 +282,10 @@ def bench_farm_backends(smoke: bool = False, nw: int = 2):
     pr_med = statistics.median(proc_t)
     best = max(ratios)
     med = statistics.median(ratios)
-    rows = [(f"farm_thread_nw{nw}", th_med * 1e6, f"{1/th_med:.0f}items/s"),
-            (f"farm_process_nw{nw}", pr_med * 1e6, f"{1/pr_med:.0f}items/s")]
+    rows = [(f"farm_thread_nw{nw}", th_med * 1e6, f"{1/th_med:.0f}items/s",
+             {"items_per_s": round(1 / th_med, 1)}),
+            (f"farm_process_nw{nw}", pr_med * 1e6, f"{1/pr_med:.0f}items/s",
+             {"items_per_s": round(1 / pr_med, 1)})]
     auto = pipeline(_ArrGen(4), farm(_gil_bound_numpy_task, n=nw)).compile(
         sample=np.linspace(1.0, 2.0, 8, dtype=np.float32))
     auto_target = [p.target for d, p in auto.placements if "farm" in d]
@@ -288,8 +297,87 @@ def bench_farm_backends(smoke: bool = False, nw: int = 2):
                  f"ratio={best:.2f}x (best of {n_pairs} interleaved pairs; "
                  f"median={med:.2f}x) auto={auto_target} "
                  f"calib={calib.source} "
-                 f"proc_hop={calib.proc_hop_s*1e6:.1f}us"))
+                 f"proc_hop={calib.proc_hop_s*1e6:.1f}us",
+                 {"ratio_best": round(best, 3),
+                  "ratio_median": round(med, 3)}))
     return rows
+
+
+# --- host tier: thread a2a vs process a2a on CPU-bound numpy work --------------
+def _gil_bound_a2a_left(x):
+    """Left-side a2a stage: interpreter-driven per-element work (never
+    releases the GIL)."""
+    s = 0.0
+    v0 = float(x[0])
+    v1 = float(x[1])
+    for i in range(60_000):
+        s += (v0 * i + v1) % 7.3
+    return x * (1.0 + s % 2.0)
+
+
+def _gil_bound_a2a_right(y):
+    """Right-side a2a stage, same fine-grain GIL-bound mold."""
+    s = 0.0
+    v = float(y[0])
+    for i in range(60_000):
+        s += (v * i + 0.7) % 5.1
+    return s
+
+
+def _a2a_spread_router(y, n_right):
+    return int(float(y[2]) * 10.0) % n_right
+
+
+def bench_a2a_backends(smoke: bool = False, nl: int = 2, nr: int = 2):
+    """The process-backed ``all_to_all`` claim: the same CPU-bound a2a as
+    GIL-serialized threads vs as OS processes over the shared-memory MPMC
+    lane grid.  Same noisy-runner discipline as ``bench_farm_backends``:
+    interleaved adjacent pairs, best demonstrated pair ratio recorded with
+    the median alongside."""
+    import statistics
+
+    from repro.core import all_to_all, pipeline
+
+    n_items = 12 if smoke else 24
+    n_pairs = 5 if smoke else 9
+
+    def run_once(mode: str) -> float:
+        g = pipeline(_ArrGen(n_items),
+                     all_to_all([_gil_bound_a2a_left] * nl,
+                                [_gil_bound_a2a_right] * nr,
+                                router=_a2a_spread_router))
+        r = g.compile(mode=mode)
+        t0 = time.perf_counter()
+        out = r.run(timeout=300.0)
+        dt = time.perf_counter() - t0
+        assert len(out) == n_items
+        return dt / n_items
+
+    thread_t, proc_t, ratios = [], [], []
+    for i in range(n_pairs):
+        if i % 2 == 0:
+            th = run_once("host")
+            pr = run_once("process")
+        else:
+            pr = run_once("process")
+            th = run_once("host")
+        thread_t.append(th)
+        proc_t.append(pr)
+        ratios.append(th / pr)
+    th_med = statistics.median(thread_t)
+    pr_med = statistics.median(proc_t)
+    best = max(ratios)
+    med = statistics.median(ratios)
+    return [
+        (f"a2a_thread_{nl}x{nr}", th_med * 1e6, f"{1/th_med:.0f}items/s",
+         {"items_per_s": round(1 / th_med, 1)}),
+        (f"a2a_process_{nl}x{nr}", pr_med * 1e6, f"{1/pr_med:.0f}items/s",
+         {"items_per_s": round(1 / pr_med, 1)}),
+        (f"a2a_process_vs_thread", pr_med * 1e6,
+         f"ratio={best:.2f}x (best of {n_pairs} interleaved pairs; "
+         f"median={med:.2f}x)",
+         {"ratio_best": round(best, 3), "ratio_median": round(med, 3)}),
+    ]
 
 
 def main() -> None:
@@ -303,15 +391,22 @@ def main() -> None:
 
     benches = [lambda: bench_graph_compile(args.smoke),
                lambda: bench_hybrid_pipeline(args.smoke),
-               lambda: bench_farm_backends(args.smoke)]
+               lambda: bench_farm_backends(args.smoke),
+               lambda: bench_a2a_backends(args.smoke)]
     if not args.smoke:
         benches += [bench_spsc_queue, bench_farm_speedup,
                     bench_pipeline_service_time, bench_accelerator_offload]
     results = {}
     print("name,us_per_call,derived")
     for b in benches:
-        for name, us, derived in b():
-            results[name] = {"us_per_call": round(us, 2), "derived": derived}
+        for row in b():
+            name, us, derived = row[:3]
+            rec = {"us_per_call": round(us, 2), "derived": derived}
+            if len(row) > 3:
+                # machine-readable throughput/ratio fields: what
+                # tools/bench_compare.py gates CI on
+                rec.update(row[3])
+            results[name] = rec
             print(f"{name},{us:.1f},{derived}")
     with open(args.out, "w") as f:
         json.dump({"bench": "graph", "smoke": args.smoke,

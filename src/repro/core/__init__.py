@@ -35,19 +35,26 @@ explicit stages —
    two concurrent threads when a ``sample`` is available;
 3. **place**: a ``Placement`` per top-level stage across the three-backend
    host tier plus the mesh — host *thread*, host *process* (a GIL-bound
-   farm gains true parallelism worth more than the shared-memory hop), or
-   *device* — consuming the constants ``perf_model.calibrate()`` measures
-   at startup (host peak FLOP/s, thread-queue hop, process-lane hop, device
-   dispatch; cached on disk) instead of baked-in defaults; farm width from
-   ``choose_farm_width``; all overridable per node;
+   farm or ``all_to_all`` gains true parallelism worth more than the
+   shared-memory hop), or *device* — consuming the constants
+   ``perf_model.calibrate()`` measures at startup (host peak FLOP/s,
+   thread-queue hop, process-lane hop, device dispatch; cached on disk,
+   ``REPRO_FF_CACHE``/``XDG_CACHE_HOME``-relocatable for hermetic CI)
+   instead of baked-in defaults; farm width from ``choose_farm_width``,
+   a2a service time from ``a2a_service_time``; all overridable per node;
 4. **emit**: ``HostRunner`` (threads over SPSC queues), ``ProcessRunner``
    (process-placed farms run OS-process workers over the shared-memory
    rings of ``core.shm``, bridged into the thread network by
-   ``core.process.ProcessFarmNode`` — order-preserving, crash-surfacing),
-   ``DeviceRunner`` (the mesh via ``core.device``), or the *hybrid* runner
-   — host stages over SPSC queues feeding device segments through
-   device-put boundary nodes.  Thread -> process -> device programs compose
-   in one graph.
+   ``core.process.ProcessFarmNode`` — order-preserving, crash-surfacing,
+   optionally autoscaling its active worker set from shm lane depth;
+   process-placed ``all_to_all`` stages run left/right worker processes
+   over the ``core.shm.ShmMPMCGrid`` lane grid via
+   ``core.process.ProcessA2ANode``, the router shipped to the left
+   children and sequence numbers riding the slot headers), ``DeviceRunner``
+   (the mesh via ``core.device``), or the *hybrid* runner — host stages
+   over SPSC queues feeding device segments through device-put boundary
+   nodes.  Thread -> process -> device programs compose in one graph;
+   every block (farm, pipeline, a2a) now has all three backends.
 
 ``emit`` covers every block on both targets: farms are ``shard_map`` over
 the data axis, ``all_to_all`` lowers to MoE-style dispatch/combine
@@ -70,11 +77,11 @@ from .queues import MPMCQueue, MPSCQueue, QueueClosed, SPMCQueue, SPSCQueue
 from .skeletons import (AutoscaleLB, BroadcastLB, Farm, FF_EOS, FFMap,
                         LoadBalancer, OnDemandLB, Pipeline, RoundRobinLB,
                         Skeleton)
-from .shm import ShmMPSCQueue, ShmSPMCQueue, ShmSPSCQueue
+from .shm import ShmMPMCGrid, ShmMPSCQueue, ShmSPMCQueue, ShmSPSCQueue
 from .graph import (A2ASkeleton, Deliver, FFGraph, GraphError, Runner,
                     all_to_all, farm, ffmap, pipeline, seq)
 from .graph import HostRunner, DeviceRunner
-from .process import ProcessFarmNode, WorkerCrashed
+from .process import ProcessA2ANode, ProcessFarmNode, WorkerCrashed
 from .compiler import (CostEstimate, HybridRunner, Placement, ProcessRunner,
                        annotate, compile_graph, emit, place)
 from .accelerator import JaxAccelerator
@@ -84,13 +91,13 @@ from . import device, perf_model
 __all__ = [
     "EOS", "GO_ON", "FF_EOS", "FFNode", "FnNode",
     "SPSCQueue", "SPMCQueue", "MPSCQueue", "MPMCQueue", "QueueClosed",
-    "ShmSPSCQueue", "ShmSPMCQueue", "ShmMPSCQueue",
+    "ShmSPSCQueue", "ShmSPMCQueue", "ShmMPSCQueue", "ShmMPMCGrid",
     "Pipeline", "Farm", "FFMap", "Skeleton",
     "LoadBalancer", "RoundRobinLB", "OnDemandLB", "BroadcastLB",
     "AutoscaleLB",
     "FFGraph", "GraphError", "Deliver", "Runner", "HostRunner",
     "DeviceRunner", "HybridRunner", "ProcessRunner", "A2ASkeleton",
-    "ProcessFarmNode", "WorkerCrashed",
+    "ProcessFarmNode", "ProcessA2ANode", "WorkerCrashed",
     "seq", "pipeline", "farm", "ffmap", "all_to_all",
     "CostEstimate", "Placement", "annotate", "place", "emit",
     "compile_graph",

@@ -26,7 +26,11 @@ layers arbitrary networks over its core channels:
    HostRunner`; all-device -> :class:`~repro.core.graph.DeviceRunner`;
    process-placed farm stages become :class:`~repro.core.process.
    ProcessFarmNode` boundary nodes (OS-process workers over the
-   shared-memory SPSC rings of ``core/shm.py``) inside a
+   shared-memory SPSC rings of ``core/shm.py``; ``autoscale`` farms carry
+   an AutoscaleLB over the shm lanes) and process-placed ``all_to_all``
+   stages become :class:`~repro.core.process.ProcessA2ANode` (left/right
+   worker processes over an ``ShmMPMCGrid`` lane grid, router in the left
+   children, sequence-ordered collection) inside a
    :class:`ProcessRunner`; mixed host/device -> :class:`HybridRunner`, host
    stages over SPSC queues feeding device segments on the mesh through
    device-put boundary nodes (:class:`_DeviceStageNode` stacks a microbatch,
@@ -54,7 +58,7 @@ from .graph import (A2AG, DeviceRunner, FarmG, FFGraph, GraphError,
                     HostRunner, MapG, PipeG, SeqG, _device_fn, _is_pure_seq,
                     _pure_of)
 from .node import GO_ON, FFNode
-from .process import ProcessFarmNode, fn_picklable
+from .process import ProcessA2ANode, ProcessFarmNode, fn_picklable
 
 # Baked-in cost-model fallbacks.  ``perf_model.calibrate()`` measures the
 # real values on this machine at startup (cached on disk); auto placement
@@ -294,15 +298,25 @@ def _device_eligible(n: Any) -> bool:
 
 
 def _process_ineligible_reason(n: Any) -> Optional[str]:
-    """Why this stage cannot run as a process farm (None when it can).
+    """Why this stage cannot run on the process tier (None when it can).
 
     The process tier ships each worker's ``svc`` callable to a child once at
-    startup, so it needs a farm of pure (stateless-callable) workers with
-    pure-or-absent emitter/collector and the default round-robin schedule."""
+    startup, so it needs pure (stateless-callable) workers: a farm with
+    pure-or-absent emitter/collector and the default round-robin schedule
+    (``autoscale`` is fine — the process farm carries its own AutoscaleLB
+    over the shm lanes), or an ``all_to_all`` whose left/right workers and
+    router all pickle."""
+    if isinstance(n, A2AG):
+        fns = [_pure_of(x) for x in (*n.left, *n.right)]
+        if any(f is None for f in fns):
+            return "a2a workers must be pure callables to ship to a process"
+        if not all(fn_picklable(f) for f in fns):
+            return "a2a worker callable is not picklable for process startup"
+        if n.router is not None and not fn_picklable(n.router):
+            return "a2a router is not picklable for process startup"
+        return None
     if not isinstance(n, FarmG):
-        return "only farm stages process-lower (non-farm stage)"
-    if n.autoscale:
-        return "autoscale scales threads at runtime (host thread tier)"
+        return "only farm and all_to_all stages process-lower"
     if n.lb is not None or n.ondemand is not None:
         return "custom lb/ondemand schedules are thread-tier only"
     fns = [n.fn] if n.fn is not None else [_pure_of(w) for w in n.workers]
@@ -396,6 +410,11 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
         elif isinstance(s, FarmG):
             host_width = len(s.workers) if not s.n_auto else n_cpu
             proc_width = host_width
+        elif isinstance(s, A2AG):
+            # both sides' widths are fixed by the graph; "width" reports the
+            # total worker-process count of the stage
+            host_width = 1
+            proc_width = len(s.left) + len(s.right)
         else:
             host_width = 1
             proc_width = 1
@@ -429,17 +448,17 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
                 target, n_chips if target == "device" else host_width,
                 "feedback loop lowers as one unit")
             continue
-        if isinstance(s, FarmG) and s.autoscale:
-            # autoscale is a host-runtime request (grow/shrink threads from
-            # lane depth); a device farm has no lanes to observe — honor the
-            # flag unless an explicit override forces the device
-            s.placement = Placement("host", host_width,
-                                    "autoscale requested (host runtime)")
-            continue
         # -- cost-driven three-way decision --------------------------------
+        # autoscale is a host-runtime request (grow/shrink the active
+        # worker set from observed lane depth): a device farm has no lanes
+        # to observe, so autoscale drops the device candidate but keeps the
+        # thread-vs-process comparison — a demonstrably GIL-bound farm
+        # autoscales its *processes* instead of threads
+        autoscale = isinstance(s, FarmG) and s.autoscale
         host_t = max(c.host_time(host_width), calib.queue_hop_s)
         dev_t = (c.device_time(n_chips, calib.device_dispatch_s)
-                 if plan is not None and _device_eligible(s) else None)
+                 if plan is not None and not autoscale
+                 and _device_eligible(s) else None)
         # the process tier only pays off for demonstrably GIL-bound work
         # wide enough to parallelize (an unknown signal stays on threads),
         # and only past a hysteresis margin over the thread estimate — a
@@ -448,7 +467,17 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
         proc_t = None
         if proc_reason is None and c.releases_gil is False \
                 and proc_width >= 2:
-            t = c.process_time(proc_width, calib.proc_hop_s)
+            if isinstance(s, A2AG):
+                # the two sides pipeline across the shm grid: service time
+                # is the slower side over its width, floored by the hops
+                nL, nR = len(s.left), len(s.right)
+                t_l = sum(getattr(x.cost, "t_task", DEFAULT_T_TASK_S)
+                          for x in s.left) / nL
+                t_r = sum(getattr(x.cost, "t_task", DEFAULT_T_TASK_S)
+                          for x in s.right) / nR
+                t = pm.a2a_service_time(t_l, t_r, nL, nR, calib.proc_hop_s)
+            else:
+                t = c.process_time(proc_width, calib.proc_hop_s)
             if t < 0.8 * host_t:
                 proc_t = t
         candidates = {"host": host_t}
@@ -464,17 +493,20 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
         elif target == "host_process":
             s.placement = Placement(
                 "host_process", proc_width,
-                f"GIL-bound: {proc_width} processes {proc_t*1e6:.1f}us < "
+                ("autoscale on the process tier: " if autoscale else "")
+                + f"GIL-bound: {proc_width} processes {proc_t*1e6:.1f}us < "
                 f"threads {host_t*1e6:.1f}us "
                 f"(calibrated hop {calib.proc_hop_s*1e6:.1f}us, "
                 f"{calib.source})")
         else:
-            host_reason = "stateful/host-only" \
-                if plan is not None and not _device_eligible(s) else (
-                    "no declared FLOPs" if dev_t is None and plan is not None
-                    else ("no plan" if plan is None else
-                          f"host {host_t*1e6:.1f}us <= roofline "
-                          f"{dev_t*1e6:.1f}us"))
+            host_reason = "autoscale requested (host runtime)" \
+                if autoscale else ("stateful/host-only"
+                    if plan is not None and not _device_eligible(s) else (
+                        "no declared FLOPs"
+                        if dev_t is None and plan is not None
+                        else ("no plan" if plan is None else
+                              f"host {host_t*1e6:.1f}us <= roofline "
+                              f"{dev_t*1e6:.1f}us")))
             s.placement = Placement("host", host_width, host_reason)
     return graph
 
@@ -645,13 +677,24 @@ class ProcessRunner(HostRunner):
     stages and process farms share one streaming network."""
 
 
-def _lower_process_farm(s: FarmG, p: Placement, capacity: int,
-                        slot_bytes: int) -> SeqG:
-    """Replace a process-placed farm with its boundary node: to the rest of
-    the (thread-tier) network it is one ordinary host stage."""
+def _lower_process_stage(s: Any, p: Placement, capacity: int,
+                         slot_bytes: int) -> SeqG:
+    """Replace a process-placed farm or all_to_all with its boundary node:
+    to the rest of the (thread-tier) network it is one ordinary host
+    stage."""
     reason = _process_ineligible_reason(s)
     if reason is not None:
         raise GraphError(f"cannot process-lower {s.describe()}: {reason}")
+    if isinstance(s, A2AG):
+        lfns = [_pure_of(x) for x in s.left]
+        rfns = [_pure_of(x) for x in s.right]
+        node = ProcessA2ANode(
+            lfns, rfns, router=s.router,
+            # the grid is nL x nR eagerly allocated segments: keep the
+            # rings shallower than a farm's lanes
+            capacity=max(2, min(capacity, 32)), slot_bytes=slot_bytes,
+            label=f"process_a2a[{len(lfns)}x{len(rfns)}]")
+        return SeqG(node)
     width = max(1, p.width or len(s.workers))
     fns = [s.fn] * width if s.fn is not None \
         else [_pure_of(w) for w in s.workers]
@@ -661,7 +704,9 @@ def _lower_process_farm(s: FarmG, p: Placement, capacity: int,
         fns, pre=pre, post=post,
         # shm slots are eagerly allocated segments: keep rings shallow
         capacity=max(2, min(capacity, 64)), slot_bytes=slot_bytes,
-        label=f"process_farm[{len(fns)}]")
+        autoscale=s.autoscale,
+        label=f"process_farm[{len(fns)}]"
+        + ("@autoscale" if s.autoscale else ""))
     return SeqG(node)
 
 
@@ -691,12 +736,13 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
                   else Placement("host") for s in stages]
     report = list(zip([s.describe() for s in stages], placements))
 
-    # process-placed farms lower first, into ProcessFarmNode boundary
-    # stages: from here on the rest of emit sees them as host stages, which
-    # is what lets thread -> process -> device programs compose freely
+    # process-placed farms and a2a stages lower first, into
+    # ProcessFarmNode / ProcessA2ANode boundary stages: from here on the
+    # rest of emit sees them as host stages, which is what lets thread ->
+    # process -> device programs compose freely
     has_process = any(p.target == "host_process" for p in placements)
     if has_process:
-        lowered = [(_lower_process_farm(s, p, capacity, shm_slot_bytes)
+        lowered = [(_lower_process_stage(s, p, capacity, shm_slot_bytes)
                     if p.target == "host_process" else s)
                    for s, p in zip(stages, placements)]
         g2 = FFGraph(lowered[0] if len(lowered) == 1 else PipeG(lowered))

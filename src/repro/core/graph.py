@@ -460,15 +460,18 @@ class FFGraph:
           worker declares ``ff_releases_gil``);
         * ``place`` — a :class:`~repro.core.compiler.Placement` per top-level
           stage across host *threads*, host *processes* (true shared-memory
-          parallelism for GIL-bound farms, costed with the startup-calibrated
-          constants of ``perf_model.calibrate``), and the *device*; farm
-          widths from the cost model; overridable via
+          parallelism for GIL-bound farms and ``all_to_all`` stages, costed
+          with the startup-calibrated constants of ``perf_model.calibrate``;
+          GIL-bound ``autoscale`` farms scale their active *process* set
+          from shm lane depth), and the *device*; farm widths from the cost
+          model; overridable via
           ``placements={stage_index_or_worker_object: ...}``;
         * ``emit`` — :class:`HostRunner`, :class:`DeviceRunner`,
           :class:`~repro.core.compiler.ProcessRunner` (farm workers as OS
-          processes over shared-memory SPSC rings), or the hybrid runner
-          (host stages over SPSC queues feeding device segments through
-          device-put boundary nodes).
+          processes over shared-memory SPSC rings; a2a left/right workers
+          over the ``ShmMPMCGrid`` lane grid with sequence-ordered
+          collection), or the hybrid runner (host stages over SPSC queues
+          feeding device segments through device-put boundary nodes).
 
         ``feedback_steps=K`` lets a ``wrap_around`` graph lower onto the mesh
         through ``core.device.feedback_scan`` (K synchronous turns of the

@@ -70,6 +70,19 @@ def choose_farm_width(t_task: float, n_max: int, t_emit: float = 0.0,
     return max(1, min(w, max(1, n_max)))
 
 
+def a2a_service_time(t_left: float, t_right: float, n_left: int,
+                     n_right: int, hop: float = 0.0) -> float:
+    """Steady-state per-item service time of an ``all_to_all`` stage: the
+    left and right ranks pipeline across the lane grid, so the stage's
+    service time is the slower side over its width — floored by twice the
+    per-item channel hop, because the hosting node pays the emitter-side
+    push and the collector-side pop serially for every item.  Used by the
+    compiler's ``place`` to cost the process-tier a2a against the
+    GIL-serialized thread estimate."""
+    return max(t_left / max(1, n_left), t_right / max(1, n_right),
+               2.0 * hop)
+
+
 def pipeline_bubble_fraction(n_stages: int, n_microbatches: int) -> float:
     """GPipe bubble: (S-1)/(M+S-1) — the fill/drain idle fraction of the
     device pipeline skeleton."""
@@ -189,12 +202,20 @@ _calibration: Optional[HostCalibration] = None
 
 
 def _calib_cache_path() -> str:
+    """Resolution order: ``REPRO_FF_CALIB_CACHE`` (exact file path) >
+    ``REPRO_FF_CACHE`` (cache *directory* for everything this framework
+    persists — what CI sets per job so runs are hermetic and the
+    calibration can be pre-warmed once instead of re-measured in every
+    pytest worker) > ``XDG_CACHE_HOME`` > ``~/.cache``."""
     override = os.environ.get("REPRO_FF_CALIB_CACHE")
     if override:
         return override
-    base = os.environ.get("XDG_CACHE_HOME",
-                          os.path.join(os.path.expanduser("~"), ".cache"))
-    return os.path.join(base, "repro_ff", "calibration.json")
+    base = os.environ.get("REPRO_FF_CACHE")
+    if base:
+        return os.path.join(base, "calibration.json")
+    xdg = os.environ.get("XDG_CACHE_HOME",
+                         os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(xdg, "repro_ff", "calibration.json")
 
 
 def _measure_peak_flops() -> float:

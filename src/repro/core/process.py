@@ -18,6 +18,24 @@ callable once at startup and then only raw items.  A worker that raises
 ships an error record back; a worker that *dies* (crash, kill) is detected
 by liveness polling — either way the surrounding runner surfaces the error
 instead of wedging.
+
+With ``autoscale=True`` the farm reuses the thread tier's
+:class:`~repro.core.skeletons.AutoscaleLB` over its *shm* lanes: the full
+worker set forks once at build time, and scaling moves the round-robin
+routing boundary from observed lane depth.  An inactive worker is parked on
+its idle gate — the blocking ``pop`` on its empty input lane (microsecond
+backoff capped at 1 ms) — so growing the active set never forks a process,
+it just starts routing to a parked one.
+
+:class:`ProcessA2ANode` is the same bridge for FastFlow 3's ``ff_a2a``: left
+worker processes apply their ``svc`` callable and route each result through
+an :class:`~repro.core.shm.ShmMPMCGrid` lane selected by the graph's router;
+right worker processes drain their grid column fairly and ship results back
+over per-worker result lanes.  Sequence numbers ride the slot headers (the
+grid's routing is data-dependent, so arrival order alone cannot restore
+stream order), the parent reorders, EOS fans out row-wise (each right worker
+terminates after one EOS per left worker), and crashes on either side
+surface as :class:`WorkerCrashed`.
 """
 
 from __future__ import annotations
@@ -35,7 +53,9 @@ from typing import Any, Callable, Dict, List, Optional
 
 from .node import EOS, FFNode, GO_ON
 from .queues import QueueClosed
-from .shm import ShmError, ShmMPSCQueue, ShmSPMCQueue
+from .shm import (ShmError, ShmMPMCGrid, ShmMPSCQueue, ShmSPMCQueue,
+                  ShmSPSCQueue)
+from .skeletons import AutoscaleLB
 
 # fork keeps worker start cheap and lets closures ride along; spawn is the
 # fallback where fork does not exist (the callables must then pickle by
@@ -71,6 +91,16 @@ class WorkerCrashed(RuntimeError):
     """A farm worker process exited without finishing its stream."""
 
 
+def _pin(idx: int) -> None:
+    # FastFlow pins its farm threads round-robin onto cores
+    # (ff_mapping_utils); do the same for worker processes — schedulers
+    # on shared hosts otherwise stack them onto one core
+    try:
+        os.sched_setaffinity(0, {idx % (os.cpu_count() or 1)})
+    except (AttributeError, OSError):
+        pass
+
+
 def _worker_main(idx: int, fn: Callable, in_lane, out_lane) -> None:
     """Child process body: pop an item, push ``fn(item)``.
 
@@ -80,13 +110,7 @@ def _worker_main(idx: int, fn: Callable, in_lane, out_lane) -> None:
     input lane) terminates; an exception in ``fn`` ships an error record
     followed by EOS so the parent collector both surfaces the error and
     stops waiting on this lane."""
-    try:
-        # FastFlow pins its farm threads round-robin onto cores
-        # (ff_mapping_utils); do the same for worker processes — schedulers
-        # on shared hosts otherwise stack them onto one core
-        os.sched_setaffinity(0, {idx % (os.cpu_count() or 1)})
-    except (AttributeError, OSError):
-        pass
+    _pin(idx)
     try:
         while True:
             try:
@@ -119,11 +143,18 @@ class ProcessFarmNode(FFNode):
     emitter/collector callables the graph normal form absorbed into the farm
     — they run in the parent, around the shm hop.  Output order follows
     *input* order (a sequence-number reorder buffer), which is stricter than
-    the thread farm's arrival order and matches the device lowering."""
+    the thread farm's arrival order and matches the device lowering.
+
+    ``autoscale=True`` routes through an :class:`AutoscaleLB` over the shm
+    input lanes: every worker process forks at build time and parks on its
+    idle gate (the blocking pop on an empty lane); the balancer grows or
+    shrinks the *active* round-robin set from observed lane depth, so
+    scaling up never forks — it resumes a parked worker."""
 
     def __init__(self, fns: List[Callable], pre: Optional[Callable] = None,
                  post: Optional[Callable] = None, capacity: int = 64,
-                 slot_bytes: int = 1 << 16, label: str = "process_farm"):
+                 slot_bytes: int = 1 << 16, label: str = "process_farm",
+                 autoscale: bool = False, min_workers: int = 1):
         super().__init__()
         if not fns:
             raise ValueError("process farm with no workers")
@@ -134,6 +165,12 @@ class ProcessFarmNode(FFNode):
         self._n = len(self._fns)
         self._spmc = ShmSPMCQueue(self._n, capacity, slot_bytes)
         self._mpsc = ShmMPSCQueue(self._n, capacity, slot_bytes)
+        self._lb: Optional[AutoscaleLB] = None
+        if autoscale:
+            self._lb = AutoscaleLB(min_workers=min_workers,
+                                   max_workers=self._n)
+            self._lb._attach(self._spmc)    # shm lanes expose the same
+            #                                 len()-able lane surface
         ctx = _mp_context()
         # workers spawn at build time (before the runner's thread network and
         # any device work start) and park on their empty input lanes
@@ -185,8 +222,13 @@ class ProcessFarmNode(FFNode):
             item = self._pre(item)
         seq = self._seq
         self._seq += 1
+        # autoscale: the balancer picks within the active set (and adjusts
+        # it from lane depth); the failover scan below may route past the
+        # active boundary, but only when the chosen worker has died
+        start = self._lb.selectworker(item) if self._lb is not None \
+            else seq % self._n
         for off in range(self._n):
-            idx = (seq + off) % self._n
+            idx = (start + off) % self._n
             # record the seq before publishing the item: lane FIFO order is
             # the seq order, and the collector must never see an unmapped
             # result
@@ -318,7 +360,7 @@ class ProcessFarmNode(FFNode):
 
     # -- stats ---------------------------------------------------------------
     def node_stats(self) -> dict:
-        return {
+        s = {
             "node": self._label,
             "backend": "process",
             "workers": self._n,
@@ -326,6 +368,368 @@ class ProcessFarmNode(FFNode):
             "delivered": self._delivered,
             "routed_per_worker": list(self._routed),
             "svc_time_ema_s": self.svc_time_ema,
+            "max_lane_depth": max((l.max_depth for l in self._spmc.lanes),
+                                  default=0),
+        }
+        if self._lb is not None:
+            s["autoscale"] = {"active": self._lb.cur,
+                              "grown": self._lb.grown,
+                              "shrunk": self._lb.shrunk}
+        return s
+
+
+def _a2a_left_main(idx: int, fn: Callable,
+                   router: Optional[Callable[[Any, int], int]],
+                   in_lane: ShmSPSCQueue,
+                   row_lanes: List[ShmSPSCQueue]) -> None:
+    """Left-side a2a child: pop ``(item, seq)``, push ``fn(item)`` onto the
+    grid lane the router selects, seq riding the slot header.
+
+    Every exit path fans EOS out row-wise (one mark per right worker) and
+    leaves with exit code 0; only an *abnormal* death (crash, kill) skips
+    the fan-out, which is exactly what the parent's liveness poll keys on.
+    A graceful-but-early exit (an exception in ``fn``) first ships an error
+    record through the grid — a right worker relays it to the parent."""
+    _pin(idx)
+    nR = len(row_lanes)
+    rr = idx % nR                   # stagger round-robin per producer,
+    #                                 matching the thread A2ASkeleton
+    try:
+        while True:
+            try:
+                got, seq = in_lane.pop_seq()
+            except QueueClosed:                 # parent unwound the a2a
+                break
+            if got is EOS:
+                break
+            try:
+                y = fn(got)
+                if router is not None:
+                    # int() so jax/numpy-scalar routers (shared with the
+                    # device lowering) index the grid
+                    j = int(router(y, nR)) % nR
+                else:
+                    j, rr = rr, (rr + 1) % nR
+            except BaseException as e:  # noqa: BLE001 - relayed to parent
+                try:
+                    row_lanes[idx % nR].push_err(
+                        ShmError(idx, repr(e), traceback.format_exc()),
+                        timeout=5.0)
+                except BaseException:   # noqa: BLE001 - dead/closed column
+                    pass
+                break
+            try:
+                row_lanes[j].push(y, seq=seq)
+            except QueueClosed:                 # parent unwound the a2a
+                break
+    finally:
+        for lane in row_lanes:
+            try:
+                lane.push_eos()
+            except BaseException:   # noqa: BLE001 - closed lane on unwind
+                pass
+        in_lane.detach()
+        for lane in row_lanes:
+            lane.detach()
+
+
+def _a2a_right_main(idx: int, pin_idx: int, fn: Callable,
+                    col_lanes: List[ShmSPSCQueue],
+                    out_lane: ShmSPSCQueue) -> None:
+    """Right-side a2a child: drain the grid column fairly, push ``fn(item)``
+    (seq preserved) onto this worker's result lane.  Terminates after one
+    EOS per left worker; relays left-side error records unchanged."""
+    _pin(pin_idx)
+    nL = len(col_lanes)
+    eos = [False] * nL
+    nxt = 0
+    delay = 1e-6
+    try:
+        while not all(eos):
+            got = None
+            for off in range(nL):
+                i = (nxt + off) % nL
+                if eos[i]:
+                    continue
+                ok, item, seq = col_lanes[i].try_pop_seq()
+                if ok:
+                    nxt = (i + 1) % nL
+                    got = (item, seq, i)
+                    break
+            if got is None:
+                if all(eos[i] or col_lanes[i].drained() for i in range(nL)):
+                    break               # parent unwound the a2a
+                time.sleep(delay)
+                delay = min(delay * 2, 1e-3)
+                continue
+            delay = 1e-6
+            item, seq, lane = got
+            if item is EOS:
+                eos[lane] = True
+                continue
+            if isinstance(item, ShmError):      # left-side failure: relay
+                out_lane.push_err(item, timeout=5.0)
+                return
+            try:
+                z = fn(item)
+            except BaseException as e:  # noqa: BLE001 - shipped to parent
+                try:
+                    out_lane.push_err(ShmError(idx, repr(e),
+                                               traceback.format_exc()),
+                                      timeout=5.0)
+                except BaseException:   # noqa: BLE001 - parent may be gone
+                    pass
+                return
+            out_lane.push(z, seq=seq)
+    finally:
+        try:
+            out_lane.push_eos()
+        except BaseException:   # noqa: BLE001 - parent may be gone
+            pass
+        for lane in col_lanes:
+            lane.detach()
+        out_lane.detach()
+
+
+class ProcessA2ANode(FFNode):
+    """FastFlow 3's ``ff_a2a`` on the process tier, embedded as one host node.
+
+    ``left_fns``/``right_fns`` are picklable per-item callables, one per
+    worker process on each side.  The parent's ``svc`` round-robins inputs
+    onto the left workers' shm lanes; each left worker routes its result
+    through the :class:`~repro.core.shm.ShmMPMCGrid` lane chosen by
+    ``router(y, n_right)`` (default: per-producer staggered round-robin,
+    matching the thread :class:`~repro.core.graph.A2ASkeleton`); right
+    workers drain their column fairly and ship results back.  Sequence
+    numbers ride the slot headers end to end, so output order follows
+    *input* order — stricter than the thread a2a's arrival order and
+    matching the process farm / device lowerings.
+
+    Crash surfacing mirrors :class:`ProcessFarmNode`: exceptions ship back
+    as error records (left-side ones relayed through a right worker); a
+    killed worker on either side is caught by exit-code liveness polling.
+    Failure unwinds by closing the input lanes *and* the grid — the
+    process-tier equivalent of the thread a2a's drainer fix: a dead right
+    worker's full column can no longer wedge the EOS fan-out, because a
+    closed lane makes the fan-out push raise instead of spin."""
+
+    def __init__(self, left_fns: List[Callable], right_fns: List[Callable],
+                 router: Optional[Callable[[Any, int], int]] = None,
+                 capacity: int = 64, slot_bytes: int = 1 << 16,
+                 label: str = "process_a2a"):
+        super().__init__()
+        if not left_fns or not right_fns:
+            raise ValueError("process a2a needs workers on both sides")
+        self._nL = len(left_fns)
+        self._nR = len(right_fns)
+        self._label = label
+        self._spmc = ShmSPMCQueue(self._nL, capacity, slot_bytes)
+        self._grid = ShmMPMCGrid(self._nL, self._nR, capacity, slot_bytes)
+        self._mpsc = ShmMPSCQueue(self._nR, capacity, slot_bytes)
+        ctx = _mp_context()
+        self._left_procs = [
+            ctx.Process(target=_a2a_left_main,
+                        args=(i, fn, router, self._spmc.lanes[i],
+                              self._grid.row(i)),
+                        daemon=True, name=f"ff-a2a-left-{i}")
+            for i, fn in enumerate(left_fns)]
+        self._right_procs = [
+            ctx.Process(target=_a2a_right_main,
+                        args=(j, self._nL + j, fn, self._grid.col(j),
+                              self._mpsc.lanes[j]),
+                        daemon=True, name=f"ff-a2a-right-{j}")
+            for j, fn in enumerate(right_fns)]
+        with _quiet_fork():
+            for p in (*self._left_procs, *self._right_procs):
+                p.start()
+        self._seq = 0
+        self._delivered = 0
+        self._routed = [0] * self._nL
+        self._eos_seen = [False] * self._nR
+        self._collector: Optional[threading.Thread] = None
+        self._destroyed = False
+
+    @property
+    def width(self) -> int:
+        return self._nL + self._nR
+
+    # -- parent-side emitter -------------------------------------------------
+    def _push_alive(self, idx: int, payload: Any, seq: int) -> bool:
+        lane = self._spmc.lanes[idx]
+        delay = 1e-6
+        while not lane.try_push(payload, seq=seq):
+            if self.error is not None:
+                return False
+            if delay >= 1e-3 and not self._left_procs[idx].is_alive():
+                return False
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-3)
+        return True
+
+    def svc(self, item: Any) -> Any:
+        if self.error is not None:      # collector flagged a failed a2a
+            raise self.error
+        seq = self._seq
+        self._seq += 1
+        for off in range(self._nL):
+            idx = (seq + off) % self._nL
+            if self._push_alive(idx, item, seq):
+                self._routed[idx] += 1
+                return GO_ON
+        if self.error is None:
+            self.error = WorkerCrashed(
+                f"{self._label}: all {self._nL} left worker processes died")
+        raise self.error
+
+    # -- parent-side collector ----------------------------------------------
+    def _collect(self) -> None:
+        hold: Dict[int, Any] = {}       # out-of-order results by sequence
+        nxt = 0
+        delay = 1e-6
+        last_liveness = time.monotonic()
+        while not all(self._eos_seen):
+            ok, got, lane, seq = self._mpsc.try_pop_any_seq()
+            if not ok:
+                now = time.monotonic()
+                if now - last_liveness > 0.05:
+                    last_liveness = now
+                    if self._check_crashed():
+                        self._fail()
+                        return
+                time.sleep(delay)
+                delay = min(delay * 2, 1e-3)
+                continue
+            delay = 1e-6
+            if got is EOS:
+                self._eos_seen[lane] = True
+                continue
+            if isinstance(got, ShmError):
+                self.error = WorkerCrashed(
+                    f"{self._label}: worker {got.worker} raised "
+                    f"{got.exc}\n{got.tb}")
+                self._fail()
+                return
+            hold[seq] = got
+            while nxt in hold:
+                self._delivered += 1
+                self.ff_send_out(hold.pop(nxt))
+                nxt += 1
+        # completeness invariant: on a clean end of stream every routed item
+        # must have produced exactly one output.  A gap means a worker died
+        # without its error record reaching us (e.g. a push_err that timed
+        # out on a wedged column was swallowed) — surface it rather than
+        # returning a silently truncated stream.
+        if self.error is None and self._delivered < self._seq:
+            self.error = WorkerCrashed(
+                f"{self._label}: stream truncated — only {self._delivered} "
+                f"of {self._seq} items delivered (a worker failed without "
+                "its error record reaching the collector)")
+
+    def _check_crashed(self) -> bool:
+        # every graceful exit path in the worker mains ends with exit code 0
+        # (normal EOS, closed lanes on unwind, an exception shipped as an
+        # error record); a nonzero/signal exit therefore means a real crash
+        for i, p in enumerate(self._left_procs):
+            if not p.is_alive() and p.exitcode != 0:
+                self.error = WorkerCrashed(
+                    f"{self._label}: left worker {i} died "
+                    f"(exitcode={p.exitcode}) before end of stream")
+                return True
+        for j, p in enumerate(self._right_procs):
+            if not self._eos_seen[j] and not p.is_alive() \
+                    and p.exitcode != 0:
+                self.error = WorkerCrashed(
+                    f"{self._label}: right worker {j} died "
+                    f"(exitcode={p.exitcode}) before end of stream")
+                return True
+        return False
+
+    def _fail(self) -> None:
+        """Unwind a failed a2a without wedging: refuse new input (``svc``
+        raises once ``self.error`` is set), close the left input lanes
+        (parked left workers' pops raise) and the whole grid (left workers
+        blocked pushing into a dead right worker's column raise instead of
+        spinning; right workers see closed-and-drained columns and exit),
+        then keep the result lanes draining so every survivor reaches its
+        EOS."""
+        self._spmc.close_all()
+        self._grid.close_all()
+        deadline = time.monotonic() + 10.0
+        while not all(self._eos_seen) and time.monotonic() < deadline:
+            ok, got, lane, _seq = self._mpsc.try_pop_any_seq()
+            if ok:
+                if got is EOS:
+                    self._eos_seen[lane] = True
+                continue
+            if all(self._eos_seen[j] or not p.is_alive()
+                   for j, p in enumerate(self._right_procs)):
+                break
+            time.sleep(1e-4)
+
+    # -- lifecycle -----------------------------------------------------------
+    def svc_init(self) -> int:
+        self._collector = threading.Thread(target=self._collect, daemon=True,
+                                           name=f"{self._label}-collector")
+        self._collector.start()
+        return 0
+
+    def svc_end(self) -> None:
+        try:
+            for i in range(self._nL):
+                if self._left_procs[i].is_alive() \
+                        or not self._spmc.lanes[i].empty():
+                    try:
+                        # generous timeout: a full input lane drains as long
+                        # as the grid is moving, and the collector is
+                        # concurrently draining the far end
+                        self._spmc.lanes[i].push_eos(timeout=10.0)
+                    except (TimeoutError, QueueClosed):
+                        pass
+            if self._collector is not None:
+                self._collector.join(timeout=30.0)
+            for p in (*self._left_procs, *self._right_procs):
+                p.join(timeout=5.0)
+                if p.is_alive():
+                    p.terminate()
+        finally:
+            self._destroy()
+
+    def _destroy(self) -> None:
+        if not self._destroyed:
+            self._destroyed = True
+            self._spmc.destroy()
+            self._grid.destroy()
+            self._mpsc.destroy()
+
+    def __del__(self):
+        # a compiled-but-never-run or abandoned node must still release its
+        # workers and segments (same contract as ProcessFarmNode)
+        try:
+            if self._destroyed:
+                return
+            self._spmc.close_all()
+            self._grid.close_all()
+            for p in (*self._left_procs, *self._right_procs):
+                p.join(timeout=1.0)
+                if p.is_alive():
+                    p.terminate()
+            self._destroy()
+        except Exception:   # noqa: BLE001 - interpreter teardown
+            pass
+
+    # -- stats ---------------------------------------------------------------
+    def node_stats(self) -> dict:
+        return {
+            "node": self._label,
+            "backend": "process",
+            "left_workers": self._nL,
+            "right_workers": self._nR,
+            "items": self._seq,
+            "delivered": self._delivered,
+            "routed_per_left_worker": list(self._routed),
+            "svc_time_ema_s": self.svc_time_ema,
+            # grid high-water marks are producer-local (they live in the
+            # left children), so only the parent-fed input lanes report here
             "max_lane_depth": max((l.max_depth for l in self._spmc.lanes),
                                   default=0),
         }

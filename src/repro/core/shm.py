@@ -20,8 +20,20 @@ Payload encoding per slot:
   :data:`~repro.core.node.EOS` sentinel so identity checks keep working
   across the boundary) and ``ERR`` (a pickled error record from a worker).
 
+Each slot header also carries a **u64 sequence number** alongside the
+length/tag word.  Per-lane FIFO order is enough for a farm (one hop, parent
+assigns seqs and matches results by arrival order), but the ``all_to_all``
+grid routes items data-dependently across two hops, so the seq must ride the
+wire with the payload — in the fixed header, not the payload, so bare
+ndarrays keep the raw-slab fast path.
+
 Layer 2 composes the same SPMC / MPSC lane bundles as ``core/queues.py`` out
-of these rings — the emitter/collector wiring of a process farm.
+of these rings — the emitter/collector wiring of a process farm — plus
+:class:`ShmMPMCGrid`, the process-tier instance of
+``queues.MPMCQueue``: an nL x nR grid of SPSC lanes where producer ``i``
+owns row ``i`` and consumer ``j`` owns column ``j``, so every lane keeps the
+single-writer index discipline.  It is the interconnect of the process-backed
+``all_to_all`` (``core/process.ProcessA2ANode``).
 """
 
 from __future__ import annotations
@@ -44,7 +56,8 @@ _OFF_HEAD = 64
 _OFF_CLOSED = 128
 _HEADER = 192
 
-_SLOT_HDR = 16           # u32 payload length | u8 tag | padding
+_SLOT_HDR = 16           # u32 payload length | u8 tag | 3B pad | u64 seq
+_SLOT_FMT = "<IB3xQ"
 
 TAG_PKL = 0
 TAG_ARR = 1
@@ -146,7 +159,7 @@ class ShmSPSCQueue:
         return self.closed and self.empty()
 
     # -- encode / decode -----------------------------------------------------
-    def _encode(self, base: int, tag: int, obj: Any) -> None:
+    def _encode(self, base: int, tag: int, obj: Any, seq: int = 0) -> None:
         if tag == TAG_ARR:
             dt = obj.dtype.str.encode("ascii")
             meta = struct.pack("<BB", obj.ndim, len(dt)) + dt \
@@ -171,13 +184,13 @@ class ShmSPSCQueue:
             self._buf[off:off + payload_len] = payload
         else:                       # TAG_EOS
             payload_len = 0
-        struct.pack_into("<IB", self._buf, base, payload_len, tag)
+        struct.pack_into(_SLOT_FMT, self._buf, base, payload_len, tag, seq)
 
-    def _decode(self, base: int) -> Any:
-        payload_len, tag = struct.unpack_from("<IB", self._buf, base)
+    def _decode(self, base: int) -> Tuple[Any, int]:
+        payload_len, tag, seq = struct.unpack_from(_SLOT_FMT, self._buf, base)
         off = base + _SLOT_HDR
         if tag == TAG_EOS:
-            return EOS
+            return EOS, seq
         if tag == TAG_ARR:
             ndim, dlen = struct.unpack_from("<BB", self._buf, off)
             off += 2
@@ -189,25 +202,25 @@ class ShmSPSCQueue:
                 if ndim else dtype.itemsize
             # bytes() copies out of the slot before the producer reuses it
             return np.frombuffer(bytes(self._buf[off:off + nbytes]),
-                                 dtype=dtype).reshape(shape)
+                                 dtype=dtype).reshape(shape), seq
         obj = pickle.loads(bytes(self._buf[off:off + payload_len]))
-        return obj
+        return obj, seq
 
     # -- non-blocking primitives (the lock-free layer) -----------------------
-    def _try_push_tag(self, tag: int, obj: Any) -> bool:
+    def _try_push_tag(self, tag: int, obj: Any, seq: int = 0) -> bool:
         tail = self._load(_OFF_TAIL)
         head = self._load(_OFF_HEAD)
         nxt = (tail + 1) % self._cap
         if nxt == head:             # full
             return False
-        self._encode(_HEADER + tail * self._stride, tag, obj)
+        self._encode(_HEADER + tail * self._stride, tag, obj, seq)
         self._store(_OFF_TAIL, nxt)     # single atomic publish
         depth = (nxt - head) % self._cap
         if depth > self.max_depth:
             self.max_depth = depth
         return True
 
-    def try_push(self, item: Any) -> bool:
+    def try_push(self, item: Any, seq: int = 0) -> bool:
         # the raw-slab path only fits plain dtypes: structured dtypes
         # collapse to void under dtype.str (field names lost) and object
         # dtypes have no flat buffer — both must ride the pickle path
@@ -215,21 +228,26 @@ class ShmSPSCQueue:
                 and item.dtype.kind != "O":
             a = np.ascontiguousarray(item)
             try:
-                return self._try_push_tag(TAG_ARR, a)
+                return self._try_push_tag(TAG_ARR, a, seq)
             except ValueError:
-                return self._try_push_tag(TAG_PKL, item)
-        return self._try_push_tag(TAG_PKL, item)
+                return self._try_push_tag(TAG_PKL, item, seq)
+        return self._try_push_tag(TAG_PKL, item, seq)
 
-    def try_pop(self) -> Tuple[bool, Any]:
+    def try_pop_seq(self) -> Tuple[bool, Any, int]:
         head = self._load(_OFF_HEAD)
         if head == self._load(_OFF_TAIL):   # empty
-            return False, None
-        item = self._decode(_HEADER + head * self._stride)
+            return False, None, 0
+        item, seq = self._decode(_HEADER + head * self._stride)
         self._store(_OFF_HEAD, (head + 1) % self._cap)
-        return True, item
+        return True, item, seq
+
+    def try_pop(self) -> Tuple[bool, Any]:
+        ok, item, _seq = self.try_pop_seq()
+        return ok, item
 
     # -- blocking wrappers ---------------------------------------------------
-    def push(self, item: Any, timeout: Optional[float] = None) -> None:
+    def push(self, item: Any, timeout: Optional[float] = None,
+             seq: int = 0) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
         delay = 1e-6
         while True:
@@ -237,20 +255,20 @@ class ShmSPSCQueue:
             # items even when slots remain
             if self.closed:
                 raise QueueClosed("push to closed shm queue")
-            if self.try_push(item):
+            if self.try_push(item, seq):
                 return
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("shm SPSC push timed out")
             time.sleep(delay)
             delay = min(delay * 2, 1e-3)
 
-    def pop(self, timeout: Optional[float] = None) -> Any:
+    def pop_seq(self, timeout: Optional[float] = None) -> Tuple[Any, int]:
         deadline = None if timeout is None else time.monotonic() + timeout
         delay = 1e-6
         while True:
-            ok, item = self.try_pop()
+            ok, item, seq = self.try_pop_seq()
             if ok:
-                return item
+                return item, seq
             if self.closed:
                 raise QueueClosed("pop from closed empty shm queue")
             if deadline is not None and time.monotonic() > deadline:
@@ -258,10 +276,20 @@ class ShmSPSCQueue:
             time.sleep(delay)
             delay = min(delay * 2, 1e-3)
 
+    def pop(self, timeout: Optional[float] = None) -> Any:
+        return self.pop_seq(timeout)[0]
+
     def push_eos(self, timeout: Optional[float] = None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
         delay = 1e-6
-        while not self._try_push_tag(TAG_EOS, None):
+        while True:
+            # a closed lane's consumer is gone (or the network is unwinding)
+            # and will never see the mark; raising lets a worker's EOS
+            # fan-out unwind instead of wedging on a dead peer's full lane
+            if self.closed:
+                raise QueueClosed("push_eos to closed shm queue")
+            if self._try_push_tag(TAG_EOS, None):
+                return
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("shm SPSC push_eos timed out")
             time.sleep(delay)
@@ -270,7 +298,11 @@ class ShmSPSCQueue:
     def push_err(self, err: ShmError, timeout: Optional[float] = None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
         delay = 1e-6
-        while not self._try_push_tag(TAG_ERR, err):
+        while True:
+            if self.closed:
+                raise QueueClosed("push_err to closed shm queue")
+            if self._try_push_tag(TAG_ERR, err):
+                return
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("shm SPSC push_err timed out")
             time.sleep(delay)
@@ -342,15 +374,19 @@ class ShmMPSCQueue:
     def lane(self, idx: int) -> ShmSPSCQueue:
         return self.lanes[idx]
 
-    def try_pop_any(self) -> Tuple[bool, Any, int]:
+    def try_pop_any_seq(self) -> Tuple[bool, Any, int, int]:
         n = len(self.lanes)
         for off in range(n):
             i = (self._next + off) % n
-            ok, item = self.lanes[i].try_pop()
+            ok, item, seq = self.lanes[i].try_pop_seq()
             if ok:
                 self._next = (i + 1) % n
-                return True, item, i
-        return False, None, -1
+                return True, item, i, seq
+        return False, None, -1, 0
+
+    def try_pop_any(self) -> Tuple[bool, Any, int]:
+        ok, item, i, _seq = self.try_pop_any_seq()
+        return ok, item, i
 
     def pop_any(self, timeout: Optional[float] = None) -> Tuple[Any, int]:
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -373,3 +409,85 @@ class ShmMPSCQueue:
     def destroy(self) -> None:
         for lane in self.lanes:
             lane.destroy()
+
+
+class ShmMPMCGrid:
+    """Multiple producer / multiple consumer *processes*: an nL x nR grid of
+    shm SPSC lanes (producer ``i`` -> consumer ``j``), the process-tier
+    instance of :class:`~repro.core.queues.MPMCQueue`.
+
+    Producer ``i`` writes only row ``i`` and consumer ``j`` reads only column
+    ``j``, so every lane keeps the wait-free single-writer index discipline —
+    the MPMC behaviour is composition, not locking.  This is the stage
+    interconnect of the process-backed ``all_to_all``: left worker processes
+    attach their row (``row(i)``), right worker processes their column
+    (``col(j)``); both are plain lists of picklable lanes, so a child maps
+    only the segments it touches."""
+
+    def __init__(self, n_producers: int, n_consumers: int, capacity: int = 64,
+                 slot_bytes: int = 1 << 16):
+        self.grid = [[ShmSPSCQueue(capacity, slot_bytes)
+                      for _ in range(n_consumers)]
+                     for _ in range(n_producers)]
+        self._next = [0] * n_consumers
+
+    @property
+    def n_producers(self) -> int:
+        return len(self.grid)
+
+    @property
+    def n_consumers(self) -> int:
+        return len(self.grid[0]) if self.grid else 0
+
+    def row(self, i: int) -> List[ShmSPSCQueue]:
+        """Producer ``i``'s output lanes, one per consumer."""
+        return self.grid[i]
+
+    def col(self, j: int) -> List[ShmSPSCQueue]:
+        """Consumer ``j``'s input lanes, one per producer."""
+        return [r[j] for r in self.grid]
+
+    def push(self, producer: int, consumer: int, item: Any,
+             timeout: Optional[float] = None, seq: int = 0) -> None:
+        self.grid[producer][consumer].push(item, timeout, seq=seq)
+
+    def try_pop(self, consumer: int) -> Tuple[bool, Any, int, int]:
+        """Fair non-blocking pop from ``consumer``'s column:
+        ``(ok, item, producer, seq)``."""
+        n = len(self.grid)
+        for off in range(n):
+            i = (self._next[consumer] + off) % n
+            ok, item, seq = self.grid[i][consumer].try_pop_seq()
+            if ok:
+                self._next[consumer] = (i + 1) % n
+                return True, item, i, seq
+        return False, None, -1, 0
+
+    def pop(self, consumer: int,
+            timeout: Optional[float] = None) -> Tuple[Any, int, int]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        delay = 1e-6
+        while True:
+            ok, item, i, seq = self.try_pop(consumer)
+            if ok:
+                return item, i, seq
+            if all(row[consumer].drained() for row in self.grid):
+                raise QueueClosed("pop from closed and drained shm MPMC column")
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("shm MPMC pop timed out")
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-3)
+
+    def max_depth(self) -> int:
+        """Process-local high-water mark over every lane this side pushed."""
+        return max((l.max_depth for row in self.grid for l in row), default=0)
+
+    def close_all(self) -> None:
+        for row in self.grid:
+            for lane in row:
+                lane.close()
+
+    def destroy(self) -> None:
+        for row in self.grid:
+            for lane in row:
+                lane.destroy()

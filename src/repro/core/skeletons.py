@@ -112,13 +112,22 @@ class AutoscaleLB(LoadBalancer):
     """Autoscaling farm schedule: grow/shrink the *active* worker set from
     observed queue depth.
 
-    All worker threads exist (a parked thread blocked on an empty lane costs
-    nothing — FastFlow's blocking mode); scaling moves the round-robin
-    routing boundary between ``min_workers`` and ``max_workers``.  Every
-    ``adjust_every`` routed tasks the balancer looks at the mean depth of the
-    active lanes: above ``hi`` it activates one more worker, below ``lo`` it
-    retires the last one (items already queued on a retired lane still get
-    processed — its thread only stops receiving new work)."""
+    All workers exist from the start (a parked worker blocked on an empty
+    lane costs nothing — FastFlow's blocking mode); scaling moves the
+    round-robin routing boundary between ``min_workers`` and
+    ``max_workers``.  Every ``adjust_every`` routed tasks the balancer looks
+    at the mean depth of the active lanes: above ``hi`` it activates one
+    more worker, below ``lo`` it retires the last one (items already queued
+    on a retired lane still get processed — the worker only stops receiving
+    new work).
+
+    The balancer is backend-agnostic: it only needs an attached lane bundle
+    with a ``lanes`` list of ``len()``-able queues.  The thread farm
+    attaches its ``SPMCQueue``; the process farm
+    (``core.process.ProcessFarmNode`` with ``autoscale=True``) attaches its
+    ``ShmSPMCQueue``, so the same depth signal scales OS-process workers
+    parked on their shm idle gates — no process is ever forked at
+    runtime."""
 
     def __init__(self, min_workers: int = 1, max_workers: Optional[int] = None,
                  hi: float = 2.0, lo: float = 0.25, adjust_every: int = 16):

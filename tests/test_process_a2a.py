@@ -1,0 +1,208 @@
+"""The process-backed ``all_to_all``: ShmMPMCGrid lanes, ProcessA2ANode,
+three-way backend parity, ordering, and crash surfacing (PR 4)."""
+
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (FFNode, ProcessA2ANode, ProcessRunner, WorkerCrashed,
+                        all_to_all, pipeline)
+
+
+class Gen(FFNode):
+    def __init__(self, n):
+        super().__init__()
+        self.i, self.n = 0, n
+
+    def svc(self, _):
+        self.i += 1
+        return np.float32(self.i) if self.i <= self.n else None
+
+
+# module-level (picklable under spawn too) heterogeneous workers + router
+def _l_scale(x):
+    return x * 10.0
+
+
+def _l_shift(x):
+    return x + 1.0
+
+
+def _r_dec(y):
+    return y - 1.0
+
+
+def _r_double(y):
+    return y * 2.0
+
+
+def _route_by_value(y, n_right):
+    # traceable (device lowering) AND picklable (process lowering): cast
+    # instead of int(), which would concretize a jax tracer
+    return y.astype("int32") % n_right
+
+
+def _kill_self(x):
+    if int(x) == 5:
+        os.kill(os.getpid(), signal.SIGKILL)
+    return float(x)
+
+
+def _boom_on_seven(x):
+    if int(x) == 7:
+        raise ValueError("poisoned item")
+    return float(x)
+
+
+def _ident(x):
+    return float(x)
+
+
+def _to_zero(y, n_right):
+    return 0
+
+
+def _expected_in_order(n, lefts, rights, router):
+    """What the a2a produces, in input order (round-robin over left from
+    worker 0, matching every backend's feeder)."""
+    out = []
+    rr = [i % len(rights) for i in range(len(lefts))]
+    for seq in range(n):
+        i = seq % len(lefts)
+        y = lefts[i](np.float32(seq + 1))
+        if router is not None:
+            j = int(router(y, len(rights))) % len(rights)
+        else:
+            j, rr[i] = rr[i], (rr[i] + 1) % len(rights)
+        out.append(float(rights[j](y)))
+    return out
+
+
+# -- three-way parity ----------------------------------------------------------
+@pytest.mark.shm
+def test_a2a_parity_heterogeneous_workers_custom_router(plan):
+    lefts = [_l_scale, _l_shift]
+    rights = [_r_dec, _r_double]
+    n = 14
+    expected = _expected_in_order(n, lefts, rights, _route_by_value)
+
+    xs = [np.float32(i) for i in range(1, n + 1)]
+    host = all_to_all(lefts, rights, router=_route_by_value) \
+        .compile(mode="host").run(xs, timeout=60.0)
+    r = all_to_all(lefts, rights, router=_route_by_value) \
+        .compile(mode="process")
+    assert isinstance(r, ProcessRunner)
+    proc = r.run(xs, timeout=60.0)
+    # process a2a restores input order from wire sequence numbers — exact
+    # order, stricter than the thread a2a's arrival order (same multiset)
+    assert [float(v) for v in proc] == pytest.approx(expected)
+    assert sorted(float(v) for v in host) == pytest.approx(sorted(expected))
+    if plan is not None:
+        dev = all_to_all(lefts, rights, router=_route_by_value) \
+            .compile(plan, mode="device").run(xs)
+        assert sorted(float(v) for v in dev) \
+            == pytest.approx(sorted(expected))
+
+
+@pytest.mark.shm
+def test_a2a_parity_default_round_robin_router():
+    lefts = [_l_scale, _l_shift]
+    rights = [_r_dec, _r_double]
+    n = 12
+    expected = _expected_in_order(n, lefts, rights, None)
+    r = pipeline(Gen(n), all_to_all(lefts, rights)).compile(mode="process")
+    assert [float(v) for v in r.run(timeout=60.0)] == pytest.approx(expected)
+
+
+# -- ordering under long streams -----------------------------------------------
+@pytest.mark.shm
+def test_a2a_process_order_on_stream_longer_than_ring_capacity():
+    """The grid rings are clamped to <= 32 slots; a 400-item stream forces
+    wraparound and sustained back-pressure, and the output must still be in
+    exact input order (seq headers + the parent reorder buffer)."""
+    lefts = [_l_scale, _l_shift]
+    rights = [_r_dec, _r_double]
+    n = 400
+    expected = _expected_in_order(n, lefts, rights, _route_by_value)
+    r = pipeline(Gen(n), all_to_all(lefts, rights, router=_route_by_value)) \
+        .compile(mode="process")
+    out = [float(v) for v in r.run(timeout=120.0)]
+    assert out == pytest.approx(expected)
+
+
+# -- crash surfacing -----------------------------------------------------------
+@pytest.mark.shm
+def test_a2a_crashed_right_worker_surfaces_error_not_wedge():
+    r = pipeline(Gen(200), all_to_all([_ident, _ident],
+                                      [_kill_self, _ident],
+                                      router=_to_zero)) \
+        .compile(mode="process")
+    t0 = time.monotonic()
+    with pytest.raises(WorkerCrashed) as ei:
+        r.run(timeout=60.0)
+    assert time.monotonic() - t0 < 45.0
+    assert "right worker" in str(ei.value) and "died" in str(ei.value)
+
+
+@pytest.mark.shm
+def test_a2a_crashed_left_worker_surfaces_error_not_wedge():
+    r = pipeline(Gen(200), all_to_all([_kill_self, _ident],
+                                      [_ident, _ident])) \
+        .compile(mode="process")
+    t0 = time.monotonic()
+    with pytest.raises(WorkerCrashed) as ei:
+        r.run(timeout=60.0)
+    assert time.monotonic() - t0 < 45.0
+    assert "left worker" in str(ei.value) and "died" in str(ei.value)
+
+
+@pytest.mark.shm
+def test_a2a_right_exception_ships_back_with_traceback():
+    r = pipeline(Gen(300), all_to_all([_ident, _ident],
+                                      [_boom_on_seven, _ident],
+                                      router=_to_zero)) \
+        .compile(mode="process")
+    with pytest.raises(WorkerCrashed) as ei:
+        r.run(timeout=60.0)
+    assert "ValueError" in str(ei.value)
+
+
+@pytest.mark.shm
+def test_a2a_left_exception_relays_through_right_worker():
+    r = pipeline(Gen(300), all_to_all([_boom_on_seven, _ident],
+                                      [_ident, _ident])) \
+        .compile(mode="process")
+    with pytest.raises(WorkerCrashed) as ei:
+        r.run(timeout=60.0)
+    assert "ValueError" in str(ei.value)
+
+
+# -- node lifecycle / stats ------------------------------------------------------
+@pytest.mark.shm
+def test_a2a_node_stats_and_segment_release():
+    n = 16
+    r = pipeline(Gen(n), all_to_all([_l_scale, _l_shift],
+                                    [_r_dec, _r_double])) \
+        .compile(mode="process")
+    r.run(timeout=60.0)
+    node = [s for s in r._skel._stages if isinstance(s, ProcessA2ANode)][0]
+    st = node.node_stats()
+    assert st["backend"] == "process"
+    assert st["items"] == n and st["delivered"] == n
+    assert sum(st["routed_per_left_worker"]) == n
+    # the run completed: workers exited, segments unlinked
+    assert node._destroyed
+    assert all(not p.is_alive()
+               for p in (*node._left_procs, *node._right_procs))
+
+
+def test_a2a_stateful_workers_stay_ineligible():
+    g = pipeline(Gen(4), all_to_all([Gen(1), Gen(1)], [_ident, _ident])) \
+        .compile(mode="process")
+    # stateful left workers cannot ship to a child: stays on threads with
+    # the reason recorded
+    p = [p for d, p in g.placements if "a2a" in d][0]
+    assert p.target == "host" and "process" in p.reason

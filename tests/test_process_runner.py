@@ -86,9 +86,9 @@ def test_pipeline_parity_all_three_backends_exact_order(plan):
 
 
 @pytest.mark.shm
-def test_a2a_parity_process_mode_falls_back_to_threads(plan):
-    # all_to_all has no process lowering: mode="process" keeps it on
-    # threads (recorded in the placement reason) with identical results
+def test_a2a_process_mode_lowers_to_process_tier(plan):
+    # since the MPMC-grid lowering, mode="process" runs an eligible
+    # all_to_all on OS-process workers with identical results
     lefts = [lambda x: x * 10.0, lambda x: x + 1.0]
     rights = [lambda y: y - 1.0, lambda y: y * 2.0]
     xs = [np.float32(i) for i in range(10)]
@@ -97,9 +97,9 @@ def test_a2a_parity_process_mode_falls_back_to_threads(plan):
     host = sorted(float(v) for v in
                   all_to_all(lefts, rights).compile(mode="host").run(xs))
     r = all_to_all(lefts, rights).compile(mode="process")
-    assert all(p.target == "host" for _, p in r.placements)
-    assert any("process" in p.reason for _, p in r.placements)
-    proc = sorted(float(v) for v in r.run(xs))
+    assert isinstance(r, ProcessRunner)
+    assert [p.target for _, p in r.placements] == ["host_process"]
+    proc = sorted(float(v) for v in r.run(xs, timeout=60.0))
     assert host == proc
     if plan is not None:
         dev = sorted(float(v) for v in all_to_all(lefts, rights).compile(
@@ -217,6 +217,24 @@ def test_calibrate_measures_and_caches(tmp_path, monkeypatch):
     pm.reset_calibration()
 
 
+def test_calib_cache_path_honors_hermetic_env(tmp_path, monkeypatch):
+    """CI hermeticity: REPRO_FF_CALIB_CACHE (exact file) > REPRO_FF_CACHE
+    (cache dir, what CI sets per job) > XDG_CACHE_HOME > ~/.cache."""
+    import os
+    from repro.core.perf_model import _calib_cache_path
+
+    monkeypatch.delenv("REPRO_FF_CALIB_CACHE", raising=False)
+    monkeypatch.setenv("REPRO_FF_CACHE", str(tmp_path / "ff"))
+    assert _calib_cache_path() == str(tmp_path / "ff" / "calibration.json")
+    monkeypatch.setenv("REPRO_FF_CALIB_CACHE", str(tmp_path / "exact.json"))
+    assert _calib_cache_path() == str(tmp_path / "exact.json")
+    monkeypatch.delenv("REPRO_FF_CALIB_CACHE")
+    monkeypatch.delenv("REPRO_FF_CACHE")
+    monkeypatch.setenv("XDG_CACHE_HOME", str(tmp_path / "xdg"))
+    assert _calib_cache_path() == os.path.join(
+        str(tmp_path / "xdg"), "repro_ff", "calibration.json")
+
+
 @pytest.mark.shm
 def test_auto_place_picks_process_for_gil_bound_farm():
     """compile() with no placement overrides must choose host_process for a
@@ -304,6 +322,49 @@ def test_shutdown_releases_abandoned_process_runner():
              if isinstance(s, ProcessFarmNode)]
     assert nodes and nodes[0]._destroyed
     assert all(not p.is_alive() for p in nodes[0]._procs)
+
+
+# -- autoscaling process farms ---------------------------------------------------
+@pytest.mark.shm
+def test_autoscale_process_farm_scales_active_set_without_forking():
+    """mode="process" on an autoscale farm lowers to a ProcessFarmNode
+    driving an AutoscaleLB over the shm lanes: the full worker set forks
+    once at build time, routing starts at one active worker, and depth
+    pressure grows the active set (never the process count)."""
+    n = 120
+    r = pipeline(Gen(n), farm(_gil_bound, n=2, autoscale=True)).compile(
+        mode="process", capacity=8)
+    assert isinstance(r, ProcessRunner)
+    node = [s for s in r._skel._stages if isinstance(s, ProcessFarmNode)][0]
+    procs_before = list(node._procs)
+    out = [float(v) for v in r.run(timeout=120.0)]
+    # order preserved (seq reorder) even while the active boundary moves
+    assert out == pytest.approx([float(_gil_bound(np.float32(i)))
+                                 for i in range(1, n + 1)])
+    st = node.node_stats()["autoscale"]
+    assert st["grown"] >= 1                  # a 1-wide start under pressure
+    assert node._procs == procs_before       # scaled by routing, not forking
+    assert sum(node.node_stats()["routed_per_worker"]) == n
+
+
+@pytest.mark.shm
+def test_auto_place_sends_gil_bound_autoscale_farm_to_process_tier():
+    g = pipeline(Gen(4), farm(_gil_bound, n=2, autoscale=True))
+    r = g.compile(sample=np.float32(1.0))
+    p = [p for d, p in r.placements if "farm" in d][0]
+    assert p.target == "host_process"
+    assert "autoscale" in p.reason
+    out = r.run(timeout=60.0)
+    assert len(out) == 4
+
+
+def test_autoscale_farm_with_unknown_gil_signal_stays_on_threads():
+    # no sample, no declaration: the process tier is unreachable on an
+    # unknown GIL signal — autoscale keeps scaling threads
+    r = pipeline(Gen(4), farm(_affine, n=2, autoscale=True)).compile()
+    p = [p for d, p in r.placements if "farm" in d][0]
+    assert p.target == "host" and "autoscale" in p.reason
+    assert len(r.run(timeout=60.0)) == 4
 
 
 # -- data pipeline: process-placed augment farm ---------------------------------

@@ -10,8 +10,8 @@ import pytest
 
 from repro.core.node import EOS
 from repro.core.queues import QueueClosed
-from repro.core.shm import (ShmError, ShmMPSCQueue, ShmSPMCQueue,
-                            ShmSPSCQueue)
+from repro.core.shm import (ShmError, ShmMPMCGrid, ShmMPSCQueue,
+                            ShmSPMCQueue, ShmSPSCQueue)
 
 _CTX = mp.get_context("fork" if "fork" in mp.get_all_start_methods()
                       else "spawn")
@@ -210,3 +210,111 @@ def test_shm_error_record_roundtrip():
         assert got.worker == 3 and "ValueError" in got.exc
     finally:
         q.destroy()
+
+
+# -- sequence numbers in the slot header ----------------------------------------
+def test_shm_seq_rides_the_slot_header_on_both_payload_paths():
+    q = ShmSPSCQueue(8, 1 << 12)
+    try:
+        q.push({"k": 1}, seq=41)                        # pickle path
+        q.push(np.arange(6, dtype=np.float32), seq=42)  # raw-slab path
+        item, seq = q.pop_seq()
+        assert item == {"k": 1} and seq == 41
+        item, seq = q.pop_seq()
+        np.testing.assert_array_equal(item, np.arange(6, dtype=np.float32))
+        assert seq == 42
+        # seq-less pop still works (farm protocol unchanged)
+        q.push("plain")
+        assert q.pop() == "plain"
+    finally:
+        q.destroy()
+
+
+def test_shm_push_eos_raises_on_closed_lane():
+    # the a2a EOS fan-out must unwind (not wedge) on a lane the parent
+    # closed because its consumer died
+    q = ShmSPSCQueue(4, 1 << 10)
+    try:
+        q.close()
+        with pytest.raises(QueueClosed):
+            q.push_eos(timeout=1.0)
+    finally:
+        q.destroy()
+
+
+# -- the MPMC lane grid ----------------------------------------------------------
+def test_shm_mpmc_grid_routes_rows_to_columns():
+    g = ShmMPMCGrid(2, 3, 8, 1 << 10)
+    try:
+        g.push(0, 2, "a", seq=1)
+        g.push(1, 2, "b", seq=2)
+        g.push(0, 0, "c", seq=3)
+        # column 2 drains fairly across its two producer lanes
+        got = {g.pop(2, timeout=5.0) for _ in range(2)}
+        assert got == {("a", 0, 1), ("b", 1, 2)}
+        assert g.pop(0, timeout=5.0) == ("c", 0, 3)
+        ok, _, _, _ = g.try_pop(1)
+        assert not ok
+    finally:
+        g.destroy()
+
+
+def test_shm_mpmc_grid_close_all_raises_after_drain():
+    g = ShmMPMCGrid(2, 2, 8, 1 << 10)
+    try:
+        g.push(0, 0, "x")
+        g.close_all()
+        assert g.pop(0, timeout=5.0)[0] == "x"
+        with pytest.raises(QueueClosed):
+            g.pop(0, timeout=5.0)
+        with pytest.raises(QueueClosed):
+            g.push(0, 1, "y")
+    finally:
+        g.destroy()
+
+
+def _grid_producer_child(i, row_lanes, n_items):
+    # producer i owns row i: route item k to column k % n_cols, seq rides
+    for k in range(n_items):
+        row_lanes[k % len(row_lanes)].push(np.float64(i * 1000 + k),
+                                           seq=i * 1000 + k)
+    for lane in row_lanes:
+        lane.push_eos()
+
+
+@pytest.mark.shm
+def test_shm_mpmc_grid_cross_process_fan_in_fan_out():
+    nP, nC, n_items = 2, 2, 60
+    g = ShmMPMCGrid(nP, nC, 8, 1 << 10)
+    procs = [_CTX.Process(target=_grid_producer_child,
+                          args=(i, g.row(i), n_items), daemon=True)
+             for i in range(nP)]
+    for p in procs:
+        p.start()
+    try:
+        got = []
+        eos = 0
+        deadline = time.monotonic() + 60
+        while eos < nP * nC:
+            for j in range(nC):
+                ok, item, prod, seq = g.try_pop(j)
+                if not ok:
+                    continue
+                if item is EOS:
+                    eos += 1
+                else:
+                    got.append((j, prod, float(item), seq))
+            assert time.monotonic() < deadline, "grid fan-in stalled"
+        assert len(got) == nP * n_items
+        for j, prod, v, seq in got:
+            assert v == seq                      # seq survived the wire
+            assert int(v) % nC == j              # landed in the routed column
+            assert int(v) // 1000 == prod        # came from the owning row
+        for p in procs:
+            p.join(timeout=10.0)
+            assert p.exitcode == 0
+    finally:
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+        g.destroy()

@@ -1,0 +1,157 @@
+#!/usr/bin/env python
+"""Gate CI on benchmark regressions: compare a fresh ``BENCH_graph.json``
+against the committed ``benchmarks/BENCH_baseline.json``.
+
+Only *throughput-shaped* fields are compared — ``items_per_s`` (higher is
+better) and ``ratio_best`` (the best demonstrated pair ratio of an
+interleaved thread-vs-process run, higher is better).  Raw ``us_per_call``
+latencies are deliberately ignored.  Two mechanisms keep the gate from
+flapping on heterogeneous/noisy CI runners:
+
+- ``ratio_best`` values are machine-relative by construction (best of
+  interleaved thread-vs-process pairs, both sides sharing the same noise
+  phases), so they are compared raw;
+- absolute ``items_per_s`` values are first *normalized by a reference
+  metric* (default: ``graph_pipeline_host``, the single-threaded host
+  pipeline) measured in both runs — a uniformly faster or slower runner
+  divides out, and only metrics that moved relative to the machine's own
+  speed can trip the gate.
+
+A metric fails when its (normalized) value lands below
+``(1 - max_regression)`` of the baseline (default: a >30% regression
+fails).
+
+Usage::
+
+    python tools/bench_compare.py BENCH_graph.json benchmarks/BENCH_baseline.json
+    python tools/bench_compare.py NEW BASELINE --max-regression 0.30
+    python tools/bench_compare.py NEW BASELINE --update   # rewrite baseline
+
+Exit status: 0 when every shared metric holds (or only informational
+differences exist), 1 on any regression past the threshold, 2 on unusable
+input files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_REFERENCE = "graph_pipeline_host"
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench-compare: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    results = doc.get("results")
+    if not isinstance(results, dict):
+        print(f"bench-compare: {path} has no 'results' table",
+              file=sys.stderr)
+        sys.exit(2)
+    return results
+
+
+def _ref_scale(new: dict, base: dict, reference: str) -> tuple[float, str]:
+    """baseline/new speed ratio of the reference metric (1.0 = same-speed
+    machine), or 1.0 with a warning when either run lacks it."""
+    try:
+        n_ref = float(new[reference]["items_per_s"])
+        b_ref = float(base[reference]["items_per_s"])
+        if n_ref > 0 and b_ref > 0:
+            return b_ref / n_ref, (f"machine-speed normalization via "
+                                   f"{reference}: x{b_ref / n_ref:.3f}")
+    except (KeyError, TypeError, ValueError):
+        pass
+    return 1.0, (f"reference metric {reference!r} missing — comparing "
+                 "absolute throughput (cross-machine noise not divided out)")
+
+
+def compare(new: dict, base: dict, max_regression: float,
+            reference: str) -> int:
+    scale, note = _ref_scale(new, base, reference)
+    print(f"bench-compare: {note}")
+    failures = 0
+    rows = []
+    for name in sorted(set(new) | set(base)):
+        n_rec, b_rec = new.get(name), base.get(name)
+        if n_rec is None:
+            # a metric the baseline knows but this run did not record: a
+            # silently dropped bench would otherwise un-gate itself
+            rows.append((name, "-", "MISSING from new run", "FAIL"))
+            failures += 1
+            continue
+        if b_rec is None:
+            rows.append((name, "-", "new metric (no baseline)", "info"))
+            continue
+        for field, norm in (("items_per_s", scale), ("ratio_best", 1.0)):
+            if field not in n_rec or field not in b_rec:
+                continue
+            if field == "items_per_s" and name == reference:
+                rows.append((f"{name}.{field}",
+                             f"{float(b_rec[field]):g} -> "
+                             f"{float(n_rec[field]):g}",
+                             "reference metric", "info"))
+                continue
+            b_val = float(b_rec[field])
+            n_val = float(n_rec[field])
+            if b_val <= 0:
+                continue
+            rel = (n_val * norm) / b_val
+            status = "ok"
+            if rel < 1.0 - max_regression:
+                status = "FAIL"
+                failures += 1
+            rows.append((f"{name}.{field}",
+                         f"{b_val:g} -> {n_val:g}",
+                         f"{(rel - 1.0) * 100:+.1f}% normalized", status))
+    width = max((len(r[0]) for r in rows), default=10)
+    for name, vals, delta, status in rows:
+        print(f"  {name:<{width}}  {vals:>24}  {delta:>26}  [{status}]")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="fresh bench JSON (BENCH_graph.json)")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="relative (normalized) throughput drop that fails "
+                         "the gate (default 0.30 = 30%%)")
+    ap.add_argument("--reference", default=DEFAULT_REFERENCE,
+                    help="metric whose items_per_s serves as the machine-"
+                         "speed yardstick both runs are normalized by "
+                         f"(default: {DEFAULT_REFERENCE})")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline file from the new run "
+                         "instead of gating")
+    args = ap.parse_args()
+
+    if args.update:
+        with open(args.new) as f:
+            doc = json.load(f)
+        with open(args.baseline, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"bench-compare: baseline {args.baseline} updated from "
+              f"{args.new}")
+        return
+
+    new, base = load(args.new), load(args.baseline)
+    print(f"bench-compare: {args.new} vs {args.baseline} "
+          f"(fail below {(1 - args.max_regression) * 100:.0f}% of baseline)")
+    failures = compare(new, base, args.max_regression, args.reference)
+    if failures:
+        print(f"bench-compare: {failures} metric(s) regressed more than "
+              f"{args.max_regression * 100:.0f}% — failing the gate",
+              file=sys.stderr)
+        sys.exit(1)
+    print("bench-compare: all throughput metrics within tolerance")
+
+
+if __name__ == "__main__":
+    main()
