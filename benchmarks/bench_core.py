@@ -11,10 +11,17 @@ for ``all_to_all`` over the shm MPMC lane grid.  The device-level
 equivalents of these claims are exercised by the dry-run roofline instead
 (benchmarks/roofline.py).
 
+``bench_adaptive`` measures the adaptive runtime's two costs: the live
+drain-and-swap reconfiguration latency (``reconfig_latency_ms``) and the
+throughput overhead of an attached sampling Supervisor (as a
+plain-vs-supervised ratio).
+
 The ``--smoke`` JSON artifact carries machine-readable ``items_per_s`` /
-``ratio_best`` fields per metric; CI's bench-compare step fails the build
-when any of them regresses >30% against the committed
-``benchmarks/BENCH_baseline.json`` (see ``tools/bench_compare.py``).
+``ratio_best`` / ``reconfig_latency_ms`` fields per metric; CI's
+bench-compare step fails the build when throughput regresses >30% or the
+reconfig latency grows past its (generous, machine-normalized) bound
+against the committed ``benchmarks/BENCH_baseline.json`` (see
+``tools/bench_compare.py``).
 """
 
 from __future__ import annotations
@@ -380,6 +387,111 @@ def bench_a2a_backends(smoke: bool = False, nl: int = 2, nr: int = 2):
     ]
 
 
+# --- adaptive runtime: reconfig latency + supervisor overhead ------------------
+def _adaptive_light_task(x):
+    return x * 1.0017
+
+
+def bench_adaptive(smoke: bool = False):
+    """The adaptive-runtime costs the CI gate watches:
+
+    - ``reconfig_latency_ms``: wall time of one live drain-and-swap tier
+      migration (thread -> process, then back) on a streaming adaptive farm
+      — the price of a supervisor decision, dominated by the engine drain
+      and the process-tier fork;
+    - ``adaptive_supervisor_overhead``: throughput of an adaptive pipeline
+      with a fast-sampling Supervisor attached vs the same pipeline without
+      one, as a ratio (~1.0 when the supervisor is cheap), measured as
+      interleaved adjacent pairs like the farm benches."""
+    import statistics
+
+    from repro.core import farm, pipeline
+    from repro.core.runtime import Supervisor
+
+    n_items = 256 if smoke else 1024
+    n_pairs = 3 if smoke else 5
+
+    def run_once(supervised: bool) -> float:
+        g = pipeline(_GenNode(n_items), farm(_adaptive_light_task, n=2))
+        r = g.compile(mode="host", adaptive=True)
+        # observe-only: resize/migrate off, so the metric isolates the cost
+        # of the attached sampler (policy churn would perturb throughput and
+        # turn the CI gate into a noise comparison)
+        sup = Supervisor(r, interval=0.002, resize=False, migrate=False) \
+            if supervised else None
+        if sup:
+            sup.start()
+        t0 = time.perf_counter()
+        out = r.run()
+        dt = time.perf_counter() - t0
+        if sup:
+            sup.stop()
+        assert len(out) == n_items
+        return dt / n_items
+
+    run_once(False)                 # discard one warmup run: the very first
+    #                                 pipeline pays thread spin-up / import
+    #                                 costs that would skew pair 0's ratio
+    plain_t, sup_t, ratios = [], [], []
+    for i in range(n_pairs):
+        if i % 2 == 0:
+            pl = run_once(False)
+            su = run_once(True)
+        else:
+            su = run_once(True)
+            pl = run_once(False)
+        plain_t.append(pl)
+        sup_t.append(su)
+        ratios.append(pl / su)      # >1 would mean supervised was FASTER
+    best = max(ratios)
+    med = statistics.median(ratios)
+
+    # reconfig latency: migrate a lightly-loaded streaming farm there and
+    # back; best of a few swaps is the capability number (the worst swap on
+    # a noisy host measures the noise)
+    from repro.core import EOS as _EOS
+    g = farm(_adaptive_light_task, n=2)
+    r = g.compile(mode="host", adaptive=True)
+    r.run_then_freeze()
+    h = r.stage_handles()[0]
+    import threading
+
+    stop = threading.Event()
+
+    def pump():                     # keep a trickle of items in flight
+        i = 0
+        while not stop.is_set():
+            r.offload(float(i))
+            i += 1
+            time.sleep(1e-3)
+    threading.Thread(target=pump, daemon=True).start()
+    drain = threading.Thread(
+        target=lambda: [None for _ in iter(lambda: r.load_result()[0], False)],
+        daemon=True)
+    drain.start()
+    lat = []
+    time.sleep(0.05)
+    for _ in range(2 if smoke else 3):
+        for tier in ("host_process", "host"):
+            t0 = time.perf_counter()
+            h.migrate(tier)
+            lat.append((time.perf_counter() - t0) * 1e3)
+    stop.set()
+    r.offload(_EOS)
+    r.wait(30.0)
+    best_lat = min(lat)
+    return [
+        ("adaptive_supervisor_overhead", statistics.median(sup_t) * 1e6,
+         f"ratio={best:.2f}x (best of {n_pairs} interleaved pairs; "
+         f"median={med:.2f}x; >=1 means free)",
+         {"ratio_best": round(best, 3), "ratio_median": round(med, 3)}),
+        ("adaptive_reconfig", best_lat * 1e3,
+         f"best of {len(lat)} live tier swaps; median="
+         f"{statistics.median(lat):.1f}ms",
+         {"reconfig_latency_ms": round(best_lat, 2)}),
+    ]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -392,7 +504,8 @@ def main() -> None:
     benches = [lambda: bench_graph_compile(args.smoke),
                lambda: bench_hybrid_pipeline(args.smoke),
                lambda: bench_farm_backends(args.smoke),
-               lambda: bench_a2a_backends(args.smoke)]
+               lambda: bench_a2a_backends(args.smoke),
+               lambda: bench_adaptive(args.smoke)]
     if not args.smoke:
         benches += [bench_spsc_queue, bench_farm_speedup,
                     bench_pipeline_service_time, bench_accelerator_offload]

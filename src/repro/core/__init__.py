@@ -66,6 +66,22 @@ loop.  ``lower(plan)`` stays as a thin compat wrapper forcing all-host
 engine, and the launch entry points are all expressed as FFGraph programs
 compiled through this pipeline.
 
+The adaptive runtime (``core.runtime``) closes the stats -> placement loop
+*at runtime*: ``compile(adaptive=True)`` lowers eligible farms to
+reconfigurable ``AdaptiveFarmNode`` boundary stages (sequence-ordered on
+both host tiers), every runner exposes a uniform per-stage ``StageHandle``
+surface (stats + resize/migrate), and a ``Supervisor`` thread samples it —
+growing/shrinking active worker sets from observed lane depth (the
+AutoscaleLB policy generalized to any adaptive farm on either tier),
+migrating a farm thread <-> process mid-stream when the observed
+GIL-serialized service time crosses the other tier's estimate (drain to a
+quiescent EOS-style barrier, hot-swap the engine behind the stage's
+boundary queues, resume — order and error semantics unchanged), and feeding
+measured service times, GIL signals, and hop costs back into the
+calibration cache via ``perf_model.observe`` so the *next* ``compile()``'s
+``place()`` decisions improve.  Calibration is no longer a startup-only
+event.  With ``adaptive=False`` (the default) nothing here runs.
+
 Device side: ``core.plan`` maps logical tensor axes onto mesh axes,
 ``core.device`` holds the mesh lowerings, ``core.accelerator`` treats a
 compiled SPMD step as an offload target, and ``core.perf_model`` extends the
@@ -76,14 +92,16 @@ from .node import EOS, GO_ON, FFNode, FnNode
 from .queues import MPMCQueue, MPSCQueue, QueueClosed, SPMCQueue, SPSCQueue
 from .skeletons import (AutoscaleLB, BroadcastLB, Farm, FF_EOS, FFMap,
                         LoadBalancer, OnDemandLB, Pipeline, RoundRobinLB,
-                        Skeleton)
+                        Skeleton, ThreadFarmNode)
 from .shm import ShmMPMCGrid, ShmMPSCQueue, ShmSPMCQueue, ShmSPSCQueue
 from .graph import (A2ASkeleton, Deliver, FFGraph, GraphError, Runner,
-                    all_to_all, farm, ffmap, pipeline, seq)
+                    StageHandle, all_to_all, farm, ffmap, pipeline, seq)
 from .graph import HostRunner, DeviceRunner
 from .process import ProcessA2ANode, ProcessFarmNode, WorkerCrashed
 from .compiler import (CostEstimate, HybridRunner, Placement, ProcessRunner,
                        annotate, compile_graph, emit, place)
+from .runtime import (AdaptiveFarmNode, AdaptiveStageHandle,
+                      ReplacementEvent, Supervisor)
 from .accelerator import JaxAccelerator
 from .plan import DEFAULT_RULES, ShardingPlan, single_device_plan
 from . import device, perf_model
@@ -92,12 +110,14 @@ __all__ = [
     "EOS", "GO_ON", "FF_EOS", "FFNode", "FnNode",
     "SPSCQueue", "SPMCQueue", "MPSCQueue", "MPMCQueue", "QueueClosed",
     "ShmSPSCQueue", "ShmSPMCQueue", "ShmMPSCQueue", "ShmMPMCGrid",
-    "Pipeline", "Farm", "FFMap", "Skeleton",
+    "Pipeline", "Farm", "FFMap", "Skeleton", "ThreadFarmNode",
     "LoadBalancer", "RoundRobinLB", "OnDemandLB", "BroadcastLB",
     "AutoscaleLB",
-    "FFGraph", "GraphError", "Deliver", "Runner", "HostRunner",
-    "DeviceRunner", "HybridRunner", "ProcessRunner", "A2ASkeleton",
-    "ProcessFarmNode", "ProcessA2ANode", "WorkerCrashed",
+    "FFGraph", "GraphError", "Deliver", "Runner", "StageHandle",
+    "HostRunner", "DeviceRunner", "HybridRunner", "ProcessRunner",
+    "A2ASkeleton", "ProcessFarmNode", "ProcessA2ANode", "WorkerCrashed",
+    "AdaptiveFarmNode", "AdaptiveStageHandle", "ReplacementEvent",
+    "Supervisor",
     "seq", "pipeline", "farm", "ffmap", "all_to_all",
     "CostEstimate", "Placement", "annotate", "place", "emit",
     "compile_graph",

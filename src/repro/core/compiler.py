@@ -84,7 +84,7 @@ class CostEstimate:
     t_task: float = DEFAULT_T_TASK_S
     flops: float = 0.0
     bytes: float = 0.0
-    source: str = "default"     # default | declared | given | measured | derived
+    source: str = "default"  # default | declared | given | observed | measured | derived
     releases_gil: Optional[bool] = None
 
     def host_time(self, width: int = 1) -> float:
@@ -199,6 +199,16 @@ def _estimate(key: Any, costs: Dict, sample: Any) -> CostEstimate:
             peak = pm.get_calibration(measure=False).peak_flops
             return CostEstimate(fl / peak, fl, by, "declared",
                                 releases_gil=rg)
+        if callable(key):
+            # runtime history beats a fresh sample probe: the adaptive
+            # supervisor's perf_model.observe() feeds measured service
+            # times + GIL signals back per callable, so re-compiling a
+            # previously-run worker needs no sample= at all
+            obs = pm.lookup_observed(pm.fn_key(key))
+            if obs is not None:
+                org = rg if rg is not None else obs.get("releases_gil")
+                return CostEstimate(float(obs["t_task"]), source="observed",
+                                    releases_gil=org)
         if sample is not None and callable(key):
             try:
                 solo = _measure(key, sample)
@@ -710,6 +720,47 @@ def _lower_process_stage(s: Any, p: Placement, capacity: int,
     return SeqG(node)
 
 
+def _maybe_adaptive_node(s: Any, p: Placement, capacity: int,
+                         slot_bytes: int) -> Optional[Any]:
+    """``compile(adaptive=True)``: lower an eligible farm stage to an
+    :class:`~repro.core.runtime.AdaptiveFarmNode` — one host boundary node
+    whose engine (thread farm / process farm) the runtime supervisor can
+    resize and migrate live.  Eligible = a farm built from one replicated
+    pure worker with pure-or-absent emitter/collector and the default
+    schedule (the same shape ``autoscale`` requires); anything else returns
+    None and lowers exactly as without ``adaptive``.
+
+    Note the semantics opt-in: an adaptive farm's collector is
+    sequence-ordered on BOTH tiers (output order == input order, matching
+    the process/device lowerings and making migration order-safe), which is
+    stricter than the plain thread farm's arrival order."""
+    if not isinstance(s, FarmG) or p.target == "device":
+        return None
+    if s.fn is None or s.lb is not None or s.ondemand is not None:
+        return None
+    for part in (s.emitter, s.collector):
+        if part is not None and _pure_of(part) is None:
+            return None
+    from .runtime import AdaptiveFarmNode
+    can_proc = _process_ineligible_reason(s) is None
+    width = max(1, p.width or len(s.workers))
+    c = s.cost if isinstance(s.cost, CostEstimate) else None
+    return AdaptiveFarmNode(
+        s.fn, width,
+        pre=_pure_of(s.emitter) if s.emitter is not None else None,
+        post=_pure_of(s.collector) if s.collector is not None else None,
+        tier=("host_process" if (p.target == "host_process" and can_proc)
+              else "host"),
+        # SHALLOW engine lanes on purpose: a migration drains whatever is
+        # already inside the engine on the OLD tier, so bounding in-flight
+        # work keeps the drain (and reconfig latency) cheap — the rest of
+        # the backlog waits in the node's input queue, which survives the
+        # swap.  A few items per lane is all throughput needs.
+        capacity=max(2, min(capacity, 8)), slot_bytes=slot_bytes,
+        label=f"adaptive_farm[{width}]", can_process=can_proc,
+        thread_est_s=(c.host_time(width) if c is not None else None))
+
+
 def _materialize_widths(n: Any) -> None:
     """Host-side auto farms get their cost-chosen width before building."""
     if isinstance(n, PipeG):
@@ -729,14 +780,35 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
          feedback_steps: Optional[int] = None,
          device_batch: Optional[int] = None,
          a2a_capacity_factor: Optional[float] = None,
-         shm_slot_bytes: int = 1 << 16) -> Any:
+         shm_slot_bytes: int = 1 << 16, adaptive: bool = False) -> Any:
     """Build the runner for a placed graph (stage 4)."""
     stages = _top_stages(graph)
     placements = [s.placement if isinstance(s.placement, Placement)
                   else Placement("host") for s in stages]
     report = list(zip([s.describe() for s in stages], placements))
 
-    # process-placed farms and a2a stages lower first, into
+    # adaptive mode lowers eligible farms FIRST, into AdaptiveFarmNode
+    # boundary stages that carry their own (re-placeable) tier engine; the
+    # rest of emit sees them as plain host stages
+    adaptive_proc = False
+    if adaptive:
+        lowered = []
+        for i, (s, p) in enumerate(zip(stages, placements)):
+            node = _maybe_adaptive_node(s, p, capacity, shm_slot_bytes)
+            if node is None:
+                lowered.append(s)
+                continue
+            lowered.append(SeqG(node))
+            adaptive_proc = adaptive_proc or node.tier == "host_process"
+            report[i] = (report[i][0],
+                         dataclasses.replace(p, reason=(p.reason + "; "
+                                                        "adaptive").lstrip("; ")))
+            placements[i] = dataclasses.replace(p, target="host")
+        g2 = FFGraph(lowered[0] if len(lowered) == 1 else PipeG(lowered))
+        g2._wrap = graph._wrap
+        graph, stages = g2, lowered
+
+    # process-placed farms and a2a stages lower next, into
     # ProcessFarmNode / ProcessA2ANode boundary stages: from here on the
     # rest of emit sees them as host stages, which is what lets thread ->
     # process -> device programs compose freely
@@ -759,7 +831,7 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
                               a2a_capacity_factor=a2a_capacity_factor)
     elif targets == {"host"}:
         _materialize_widths(graph.root)
-        cls = ProcessRunner if has_process else HostRunner
+        cls = ProcessRunner if (has_process or adaptive_proc) else HostRunner
         runner = cls(graph, capacity=capacity,
                      results_capacity=results_capacity)
     else:
@@ -815,13 +887,22 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
                   axis: str = "data", feedback_steps: Optional[int] = None,
                   device_batch: Optional[int] = None,
                   a2a_capacity_factor: Optional[float] = None,
-                  shm_slot_bytes: int = 1 << 16) -> Any:
+                  shm_slot_bytes: int = 1 << 16,
+                  adaptive: bool = False) -> Any:
     """Run the staged pipeline: normalize -> annotate -> place -> emit.
 
     Note: stage-index keys in ``placements=`` refer to the *normalized*
     graph's top-level stages (normalize may collapse/fuse stages); worker
     objects (the callables/FFNodes stages were built from) survive the
-    rewrites and are the stabler key."""
+    rewrites and are the stabler key.
+
+    ``adaptive=True`` lowers eligible farm stages (one replicated pure
+    worker, pure-or-absent emitter/collector, default schedule) to
+    reconfigurable :class:`~repro.core.runtime.AdaptiveFarmNode` boundary
+    stages whose width and thread/process tier a
+    :class:`~repro.core.runtime.Supervisor` can change live, from observed
+    stats; their collectors are sequence-ordered on both tiers.  With no
+    supervisor attached an adaptive runner behaves like the static one."""
     if mode not in ("auto", "host", "process", "device"):
         raise GraphError(f"unknown compile mode {mode!r}")
     if mode == "device" and plan is None:
@@ -837,4 +918,4 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
                 results_capacity=results_capacity, axis=axis,
                 feedback_steps=feedback_steps, device_batch=device_batch,
                 a2a_capacity_factor=a2a_capacity_factor,
-                shm_slot_bytes=shm_slot_bytes)
+                shm_slot_bytes=shm_slot_bytes, adaptive=adaptive)

@@ -449,7 +449,8 @@ class FFGraph:
                 device_batch: Optional[int] = None,
                 a2a_capacity_factor: Optional[float] = None,
                 normalize: bool = True,
-                shm_slot_bytes: int = 1 << 16) -> "Runner":
+                shm_slot_bytes: int = 1 << 16,
+                adaptive: bool = False) -> "Runner":
         """The staged compile pipeline ``normalize -> annotate -> place ->
         emit`` (core/compiler.py):
 
@@ -479,7 +480,15 @@ class FFGraph:
         all_to_all expert lanes (default: lossless, host-parity).
         ``shm_slot_bytes`` sizes the fixed shared-memory ring slots of
         process-placed farms (raise it for large batches).  ``mode`` forces
-        placement: "host", "process", "device", or cost-driven "auto"."""
+        placement: "host", "process", "device", or cost-driven "auto".
+
+        ``adaptive=True`` makes eligible farm stages *re-placeable at
+        runtime*: they lower to :class:`~repro.core.runtime.AdaptiveFarmNode`
+        boundary nodes (sequence-ordered on both host tiers) whose width
+        and thread/process tier a :class:`~repro.core.runtime.Supervisor`
+        adjusts live from the runner's own ``stats()`` — see
+        ``core/runtime.py``.  Without a supervisor the adaptive runner
+        behaves like the static one."""
         from .compiler import compile_graph
         return compile_graph(self, plan, mode=mode, costs=costs,
                              sample=sample, placements=placements,
@@ -489,7 +498,8 @@ class FFGraph:
                              device_batch=device_batch,
                              a2a_capacity_factor=a2a_capacity_factor,
                              normalize=normalize,
-                             shm_slot_bytes=shm_slot_bytes)
+                             shm_slot_bytes=shm_slot_bytes,
+                             adaptive=adaptive)
 
     def lower(self, plan: Any = None, *, capacity: int = 512,
               results_capacity: int = 4096, axis: str = "data") -> "Runner":
@@ -659,6 +669,49 @@ def _build_host(n: Any, capacity: int) -> Any:
     raise GraphError(f"cannot host-lower {n!r}")
 
 
+class StageHandle:
+    """The uniform per-stage sample + reconfigure surface the adaptive
+    runtime (``core/runtime.py``) consumes across every runner.
+
+    The base handle is *read-only*: ``stats()`` snapshots the stage's
+    runtime counters and the reconfigure operations refuse.  Adaptive farm
+    stages (``compile(adaptive=True)``) return a reconfigurable subclass
+    whose ``resize`` moves the active-worker routing boundary and whose
+    ``migrate`` drains the stage to a quiescent boundary and hot-swaps its
+    engine between the thread and process tiers."""
+
+    reconfigurable = False
+
+    def __init__(self, desc: str, target: Any = None,
+                 stats_fn: Optional[Callable[[], dict]] = None,
+                 tier: str = "host"):
+        self.desc = desc
+        self._target = target
+        self._stats_fn = stats_fn
+        self._tier = tier
+
+    @property
+    def tier(self) -> str:
+        return self._tier
+
+    def stats(self) -> dict:
+        if self._stats_fn is not None:
+            return self._stats_fn()
+        from .skeletons import _stat_of
+        return _stat_of(self._target)
+
+    def can_migrate(self, target: str) -> bool:
+        return False
+
+    def resize(self, width: int) -> bool:
+        raise GraphError(f"stage {self.desc!r} is not reconfigurable "
+                         "(compile with adaptive=True for live resize)")
+
+    def migrate(self, target: str) -> bool:
+        raise GraphError(f"stage {self.desc!r} is not reconfigurable "
+                         "(compile with adaptive=True for live migration)")
+
+
 class Runner:
     """Common result surface of ``FFGraph.lower``/``FFGraph.compile``."""
 
@@ -680,6 +733,16 @@ class Runner:
         """Runtime stats: per-node service-time EMA, items processed, max
         observed lane depth — populated while/after the graph runs."""
         return {}
+
+    def stage_handles(self) -> List[StageHandle]:
+        """One :class:`StageHandle` per top-level stage — the surface the
+        adaptive supervisor samples (and, for adaptive stages, acts on)."""
+        return []
+
+    def replacement_events(self) -> List[Any]:
+        """Re-placement events (tier migrations) recorded by adaptive stages
+        — printed by the launchers' placement reports."""
+        return []
 
 
 class HostRunner(Runner):
@@ -886,6 +949,26 @@ class HostRunner(Runner):
                 "graph": self._skel.stats(),
                 "results_max_depth": self._results.max_depth}
 
+    def _top_members(self) -> List[Any]:
+        skel = self._skel
+        return list(skel._stages) if isinstance(skel, Pipeline) else [skel]
+
+    def stage_handles(self) -> List[StageHandle]:
+        handles = []
+        for st in self._top_members():
+            if getattr(st, "ff_adaptive", False):
+                handles.append(st.make_handle())
+            else:
+                desc = getattr(st, "_label", None) or type(st).__name__
+                handles.append(StageHandle(desc, st))
+        return handles
+
+    def replacement_events(self) -> List[Any]:
+        out: List[Any] = []
+        for st in self._top_members():
+            out.extend(getattr(st, "migrations", ()) or ())
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Device lowering
@@ -942,20 +1025,43 @@ class DeviceRunner(Runner):
     (``core.device.a2a_dispatch``), and ``wrap_around`` graphs run
     ``feedback_steps`` synchronous turns through ``core.device.feedback_scan``.
     Semantics match :class:`HostRunner` on pure graphs up to output ordering
-    (the host farm collector is arrival-ordered)."""
+    (the host farm collector is arrival-ordered).
+
+    Each top-level stage compiles (and is timed) as its own device part, so
+    ``stats()`` reports *per-stage* entries — the same shape every other
+    runner exposes — instead of one aggregate; a ``wrap_around`` graph runs
+    its whole feedback loop as one fused part and reports one entry.  The
+    per-stage split trades cross-stage XLA fusion (plus one host sync per
+    part per batch) for observability on multi-stage all-device graphs;
+    single-stage graphs are unaffected, and the hybrid runner's
+    ``_DeviceStageNode`` segments stay fused as before."""
 
     def __init__(self, graph: FFGraph, plan: Any, axis: str = "data",
                  feedback_steps: Optional[int] = None,
                  a2a_capacity_factor: Optional[float] = None):
         import jax
-        from .compiler import make_device_batched
-        batched, self._axis_size = make_device_batched(
-            graph, plan, axis=axis, feedback_steps=feedback_steps,
-            a2a_capacity_factor=a2a_capacity_factor)
-        self._batched = jax.jit(batched)
+        from .compiler import _top_stages, make_device_batched
         self._t0 = self._t1 = 0.0
         self._items = 0
         self._batches = 0
+        self._stats_lock = threading.Lock()
+        # _parts: [desc, jitted batched(xs, offset), svc_time_ema_s, items]
+        self._parts: List[List[Any]] = []
+        self._axis_size = 1
+        if graph._wrap:
+            batched, mult = make_device_batched(
+                graph, plan, axis=axis, feedback_steps=feedback_steps,
+                a2a_capacity_factor=a2a_capacity_factor)
+            self._parts.append([graph.describe(), jax.jit(batched), 0.0, 0])
+            self._axis_size = mult
+        else:
+            for s in _top_stages(graph):
+                sub = FFGraph(s)
+                batched, mult = make_device_batched(
+                    sub, plan, axis=axis,
+                    a2a_capacity_factor=a2a_capacity_factor)
+                self._parts.append([s.describe(), jax.jit(batched), 0.0, 0])
+                self._axis_size = max(self._axis_size, mult)
 
     def run(self, stream: Sequence) -> List[Any]:
         import jax
@@ -967,15 +1073,39 @@ class DeviceRunner(Runner):
         n = len(items)
         pad = (-n) % self._axis_size
         xs = jnp.stack(items + items[:1] * pad)
-        ys = jax.block_until_ready(self._batched(xs, jnp.int32(0)))
+        offset = jnp.int32(0)
+        for part in self._parts:
+            t0 = time.perf_counter()
+            xs = jax.block_until_ready(part[1](xs, offset))
+            per_item = (time.perf_counter() - t0) / n
+            with self._stats_lock:
+                part[2] = per_item if part[3] == 0 \
+                    else 0.5 * part[2] + 0.5 * per_item
+                part[3] += n
+        ys = xs
         self._t1 = time.perf_counter()
-        self._items += n
-        self._batches += 1
+        with self._stats_lock:
+            self._items += n
+            self._batches += 1
         # unstack the batch axis of every output leaf (a per-item function
         # may return a pytree, not just one array); padding rows dropped
         return [jax.tree.map(lambda t: t[i], ys) for i in range(n)]
 
     def stats(self) -> dict:
-        return {"backend": "DeviceRunner", "items": self._items,
-                "batches": self._batches,
-                "svc_time_ema_s": (self._t1 - self._t0) / max(1, self._items)}
+        with self._stats_lock:
+            stages = [{"node": f"device[{desc}]", "backend": "device",
+                       "items": it, "svc_time_ema_s": ema}
+                      for desc, _fn, ema, it in self._parts]
+            return {"backend": "DeviceRunner", "items": self._items,
+                    "batches": self._batches,
+                    "svc_time_ema_s": sum(s["svc_time_ema_s"]
+                                          for s in stages),
+                    "stages": stages}
+
+    def stage_handles(self) -> List[StageHandle]:
+        def snap(part):
+            with self._stats_lock:
+                return {"node": f"device[{part[0]}]", "backend": "device",
+                        "items": part[3], "svc_time_ema_s": part[2]}
+        return [StageHandle(p[0], stats_fn=(lambda p=p: snap(p)),
+                            tier="device") for p in self._parts]

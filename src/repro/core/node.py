@@ -35,6 +35,13 @@ GO_ON = _Sentinel("GO_ON")
 EOS = _Sentinel("EOS")            # FastFlow: returning NULL / FF_EOS mark
 _NO_INPUT = _Sentinel("NO_INPUT")  # activation token for source nodes
 
+# service-time EMA warm-up: the EMA seeds from the *median* of this many
+# initial samples instead of the first one alone — a slow first call (jit
+# trace, cold cache, page faults) would otherwise poison the estimate for
+# ~20 items, and the adaptive supervisor acts on these estimates
+_SVC_WARMUP_N = 5
+_SVC_EMA_ALPHA = 0.2
+
 
 def spawn_drainer(pop: Callable[[], Any], n_eos: int = 1) -> None:
     """A node that exits before consuming its input's end-of-stream — by
@@ -70,6 +77,11 @@ class FFNode:
         self.error: Optional[BaseException] = None
         self.svc_calls: int = 0   # for stats (ffStats analogue)
         self.svc_time_ema: float = 0.0   # EMA of svc() service time, seconds
+        # counters above are mutated by the node's worker thread and read by
+        # stats()/the adaptive supervisor mid-stream: updates and snapshots
+        # both go through this lock so readers see a consistent pair
+        self._stats_lock = threading.Lock()
+        self._svc_warmup: list = []
         # When this node has an input stream but must generate initial tasks
         # itself (divide&conquer emitters on a feedback loop), set
         # ``prime = True``: svc(None) is called once before consuming input.
@@ -118,12 +130,11 @@ class FFNode:
                     if task is EOS:
                         input_eos = True
                         break
-                self.svc_calls += 1
+                with self._stats_lock:
+                    self.svc_calls += 1
                 t0 = time.perf_counter()
                 result = self.svc(None if task is _NO_INPUT else task)
-                dt = time.perf_counter() - t0
-                self.svc_time_ema = dt if self.svc_calls == 1 \
-                    else 0.8 * self.svc_time_ema + 0.2 * dt
+                self._record_svc_time(time.perf_counter() - t0)
                 if result is None:   # paper: returning NULL terminates the node
                     result = EOS
                 if result is EOS:
@@ -155,11 +166,26 @@ class FFNode:
     def _alive(self) -> bool:
         return self.thread is not None and self.thread.is_alive()
 
+    def _record_svc_time(self, dt: float) -> None:
+        """Fold one measured ``svc`` duration into ``svc_time_ema``.  The
+        first ``_SVC_WARMUP_N`` samples seed the EMA with their running
+        median, so one slow warm-up call cannot poison the estimate."""
+        with self._stats_lock:
+            if len(self._svc_warmup) < _SVC_WARMUP_N:
+                self._svc_warmup.append(dt)
+                self.svc_time_ema = \
+                    sorted(self._svc_warmup)[len(self._svc_warmup) // 2]
+            else:
+                self.svc_time_ema = ((1.0 - _SVC_EMA_ALPHA) * self.svc_time_ema
+                                     + _SVC_EMA_ALPHA * dt)
+
     def node_stats(self) -> dict:
         """Per-node runtime stats for ``runner.stats()``: items processed and
-        the service-time EMA (seconds)."""
-        return {"node": type(self).__name__, "items": self.svc_calls,
-                "svc_time_ema_s": self.svc_time_ema}
+        the service-time EMA (seconds).  Snapshot under the stats lock so a
+        mid-stream reader never sees a torn calls/EMA pair."""
+        with self._stats_lock:
+            return {"node": type(self).__name__, "items": self.svc_calls,
+                    "svc_time_ema_s": self.svc_time_ema}
 
 
 class FnNode(FFNode):

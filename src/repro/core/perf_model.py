@@ -385,6 +385,150 @@ def reset_calibration() -> None:
     _calibration = None
 
 
+# --------------------------------------------------------------------------
+# Online refinement — runner stats fed back into the calibration cache
+# --------------------------------------------------------------------------
+# ``calibrate()`` made the place() constants measured-at-startup instead of
+# baked-in; ``observe()`` closes the remaining gap: runtime stats (sampled by
+# core/runtime.Supervisor, or passed in by hand) refine BOTH the channel
+# constants (shared-memory hop EMA) and a per-callable table of measured
+# service times + GIL signals, so the *next* compile()'s annotate/place pass
+# starts from what actually happened rather than a fresh sample probe.
+# The table is keyed by ``fn_key`` (module.qualname — stable across runs of
+# the same code, best-effort across edits) and persists inside the same
+# on-disk calibration cache.
+
+_OBSERVE_MIN_ITEMS = 8      # ignore records with fewer processed items
+_observed: Optional[Dict[str, dict]] = None
+
+
+def fn_key(fn) -> Optional[str]:
+    """Stable-ish identity for a worker callable in the observed-cost table
+    (``module.qualname``).  None for objects without one (partials, odd
+    callables) — those simply never match an observation."""
+    mod = getattr(fn, "__module__", None)
+    qn = getattr(fn, "__qualname__", None)
+    if not mod or not qn:
+        return None
+    return f"{mod}.{qn}"
+
+
+def _load_observed() -> Dict[str, dict]:
+    global _observed
+    if _observed is None:
+        _observed = {}
+        try:
+            with open(_calib_cache_path()) as f:
+                d = json.load(f)
+            obs = d.get("observed")
+            if (isinstance(obs, dict) and d.get("version") == _CALIB_VERSION
+                    and d.get("cpu_count") == os.cpu_count()):
+                _observed = {str(k): dict(v) for k, v in obs.items()
+                             if isinstance(v, dict)}
+        except (OSError, ValueError, TypeError):
+            pass
+    return _observed
+
+
+def lookup_observed(key: Optional[str],
+                    min_items: int = _OBSERVE_MIN_ITEMS) -> Optional[dict]:
+    """The observed cost record for a callable key, or None when there is no
+    (sufficiently substantiated) history.  Consumed by the compiler's
+    ``annotate`` stage: a callable with runtime history no longer needs a
+    ``sample=`` probe to be cost-placed."""
+    if not key:
+        return None
+    rec = _load_observed().get(key)
+    if rec and rec.get("items", 0) >= min_items \
+            and float(rec.get("t_task", 0.0)) > 0.0:
+        return dict(rec)
+    return None
+
+
+def reset_observed() -> None:
+    """Drop the in-memory observed-cost table (tests)."""
+    global _observed
+    _observed = None
+
+
+def _save_observed() -> None:
+    path = _calib_cache_path()
+    c = get_calibration(measure=False)
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"version": _CALIB_VERSION,
+                       "cpu_count": os.cpu_count(), **c.as_dict(),
+                       "observed": _load_observed()}, f)
+    except OSError:
+        pass
+
+
+def _stat_records(x, out: list) -> None:
+    """Collect node-stat dicts from an arbitrarily nested stats() tree."""
+    if isinstance(x, dict):
+        if "svc_cpu_ema_s" in x or "hop_ema_s" in x or "fn_key" in x:
+            out.append(x)
+        for v in x.values():
+            _stat_records(v, out)
+    elif isinstance(x, (list, tuple)):
+        for v in x:
+            _stat_records(v, out)
+
+
+def observe(stats: dict, alpha: float = 0.25, write: bool = False) -> int:
+    """Fold one ``runner.stats()`` snapshot (or any nested stats tree) into
+    the calibration state; returns the number of facts absorbed.
+
+    - thread-tier farm records (``backend == "thread"`` with a ``fn_key``
+      and a per-item CPU-time EMA) update the observed per-callable service
+      time; a ``gil_ratio`` (CPU/wall) measured under >=2 concurrently
+      active workers also settles the callable's GIL signal — below 0.7 the
+      workers were serializing on the GIL (``releases_gil=False``), above
+      0.9 they truly ran in parallel (``True``);
+    - process-tier records with a parent-side ``hop_ema_s`` refine the
+      calibrated shared-memory lane hop with an EMA.
+
+    ``write=True`` persists the refreshed calibration + observed table into
+    the on-disk cache (the supervisor writes once at ``stop()``; periodic
+    in-memory merges stay cheap)."""
+    global _calibration
+    recs: list = []
+    _stat_records(stats, recs)
+    table = _load_observed()
+    absorbed = 0
+    for r in recs:
+        items = int(r.get("items", 0) or 0)
+        if items < _OBSERVE_MIN_ITEMS:
+            continue
+        key = r.get("fn_key")
+        cpu = float(r.get("svc_cpu_ema_s", 0.0) or 0.0)
+        if key and cpu > 0.0 and r.get("backend") == "thread":
+            prev = table.get(key)
+            rg = prev.get("releases_gil") if prev else None
+            ratio = r.get("gil_ratio")
+            if ratio is not None and int(r.get("active", 1) or 1) >= 2:
+                if ratio < 0.7:
+                    rg = False
+                elif ratio > 0.9:
+                    rg = True
+            t = cpu if prev is None else \
+                (1.0 - alpha) * float(prev["t_task"]) + alpha * cpu
+            table[key] = {"t_task": t, "releases_gil": rg,
+                          "items": max(items, prev["items"] if prev else 0)}
+            absorbed += 1
+        hop = float(r.get("hop_ema_s", 0.0) or 0.0)
+        if hop > 0.0 and r.get("backend") == "process":
+            c = get_calibration(measure=False)
+            _calibration = dataclasses.replace(
+                c, proc_hop_s=(1.0 - alpha) * c.proc_hop_s + alpha * hop,
+                source="observed")
+            absorbed += 1
+    if write and absorbed:
+        _save_observed()
+    return absorbed
+
+
 # ring-model per-chip traffic for each collective kind -----------------------
 def collective_link_bytes(kind: str, operand_bytes: float, group_size: int) -> float:
     """Per-chip bytes that traverse links for one collective, ring algorithm.

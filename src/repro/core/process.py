@@ -185,6 +185,10 @@ class ProcessFarmNode(FFNode):
         self._seq = 0
         self._delivered = 0
         self._routed = [0] * self._n
+        self._active = self._n      # routing boundary when no balancer
+        self._hop_ema = 0.0         # parent-side per-item shm push cost
+        self._gap_ema = 0.0         # collector-side inter-delivery gap
+        self._last_delivery: Optional[float] = None
         # lane i is FIFO, so its results map to these seqs in arrival order
         # (deque append/popleft from opposite ends is GIL-atomic)
         self._lane_seqs = [collections.deque() for _ in range(self._n)]
@@ -196,6 +200,22 @@ class ProcessFarmNode(FFNode):
     def width(self) -> int:
         return self._n
 
+    @property
+    def active_workers(self) -> int:
+        return self._lb.cur if self._lb is not None else self._active
+
+    def set_active(self, k: int) -> None:
+        """Move the routing boundary: new items go to workers [0, k).  The
+        full worker set forked at build time; an inactive worker parks on
+        the blocking pop of its empty shm lane, so growing the active set
+        never forks — it resumes a parked worker.  This is the AutoscaleLB
+        mechanism exposed to an external policy (the adaptive supervisor)."""
+        k = max(1, min(int(k), self._n))
+        if self._lb is not None:
+            self._lb.cur = min(max(k, self._lb.min_workers),
+                               self._lb.max_workers or self._n)
+        self._active = k
+
     # -- parent-side emitter -------------------------------------------------
     def _push_alive(self, idx: int, payload: Any) -> bool:
         """Blocking push to worker ``idx`` that fails over instead of
@@ -204,7 +224,9 @@ class ProcessFarmNode(FFNode):
         blocked on its full result lane never drains its input again)."""
         lane = self._spmc.lanes[idx]
         delay = 1e-6
+        self._push_waited = False
         while not lane.try_push(payload):
+            self._push_waited = True
             if self.error is not None:
                 return False
             # liveness only once the lane stays full for ~1ms (a waitpid
@@ -220,13 +242,15 @@ class ProcessFarmNode(FFNode):
             raise self.error
         if self._pre is not None:
             item = self._pre(item)
-        seq = self._seq
-        self._seq += 1
+        with self._stats_lock:
+            seq = self._seq
+            self._seq += 1
         # autoscale: the balancer picks within the active set (and adjusts
         # it from lane depth); the failover scan below may route past the
         # active boundary, but only when the chosen worker has died
         start = self._lb.selectworker(item) if self._lb is not None \
-            else seq % self._n
+            else seq % max(1, min(self._active, self._n))
+        t0 = time.perf_counter()
         for off in range(self._n):
             idx = (start + off) % self._n
             # record the seq before publishing the item: lane FIFO order is
@@ -234,7 +258,14 @@ class ProcessFarmNode(FFNode):
             # result
             self._lane_seqs[idx].append(seq)
             if self._push_alive(idx, item):
-                self._routed[idx] += 1
+                hop = time.perf_counter() - t0
+                with self._stats_lock:
+                    self._routed[idx] += 1
+                    # the hop EMA is the *channel* cost — a push that waited
+                    # on a full lane measured back-pressure, not the hop
+                    if not self._push_waited:
+                        self._hop_ema = hop if self._hop_ema == 0.0 \
+                            else 0.9 * self._hop_ema + 0.1 * hop
                 return GO_ON
             self._lane_seqs[idx].pop()  # un-record the failed attempt
         # every worker is gone; the collector (or this) surfaces the crash
@@ -279,7 +310,14 @@ class ProcessFarmNode(FFNode):
                 nxt += 1
                 if self._post is not None:
                     out = self._post(out)
-                self._delivered += 1
+                now = time.perf_counter()
+                with self._stats_lock:
+                    if self._last_delivery is not None:
+                        gap = now - self._last_delivery
+                        self._gap_ema = gap if self._gap_ema == 0.0 \
+                            else 0.8 * self._gap_ema + 0.2 * gap
+                    self._last_delivery = now
+                    self._delivered += 1
                 self.ff_send_out(out)
 
     def _check_crashed(self) -> bool:
@@ -319,6 +357,8 @@ class ProcessFarmNode(FFNode):
         return 0
 
     def svc_end(self) -> None:
+        if self._destroyed:             # idempotent: already drained
+            return
         try:
             for i in range(self._n):
                 if self._procs[i].is_alive() or not self._spmc.lanes[i].empty():
@@ -360,17 +400,28 @@ class ProcessFarmNode(FFNode):
 
     # -- stats ---------------------------------------------------------------
     def node_stats(self) -> dict:
-        s = {
-            "node": self._label,
-            "backend": "process",
-            "workers": self._n,
-            "items": self._seq,
-            "delivered": self._delivered,
-            "routed_per_worker": list(self._routed),
-            "svc_time_ema_s": self.svc_time_ema,
-            "max_lane_depth": max((l.max_depth for l in self._spmc.lanes),
-                                  default=0),
-        }
+        from .perf_model import fn_key
+        # after the run the shm segments are released: report empty lanes
+        # (max_depth is a process-local attribute and stays valid)
+        depths = [0] * self._n if self._destroyed \
+            else [len(l) for l in self._spmc.lanes]
+        with self._stats_lock:
+            s = {
+                "node": self._label,
+                "backend": "process",
+                "workers": self._n,
+                "active": self.active_workers,
+                "items": self._seq,
+                "delivered": self._delivered,
+                "routed_per_worker": list(self._routed),
+                "svc_time_ema_s": self.svc_time_ema,
+                "hop_ema_s": self._hop_ema,
+                "delivery_gap_ema_s": self._gap_ema,
+                "lane_depths": depths,
+                "max_lane_depth": max(
+                    (l.max_depth for l in self._spmc.lanes), default=0),
+                "fn_key": fn_key(self._fns[0]),
+            }
         if self._lb is not None:
             s["autoscale"] = {"active": self._lb.cur,
                               "grown": self._lb.grown,
@@ -569,8 +620,9 @@ class ProcessA2ANode(FFNode):
     def svc(self, item: Any) -> Any:
         if self.error is not None:      # collector flagged a failed a2a
             raise self.error
-        seq = self._seq
-        self._seq += 1
+        with self._stats_lock:
+            seq = self._seq
+            self._seq += 1
         for off in range(self._nL):
             idx = (seq + off) % self._nL
             if self._push_alive(idx, item, seq):
@@ -611,7 +663,8 @@ class ProcessA2ANode(FFNode):
                 return
             hold[seq] = got
             while nxt in hold:
-                self._delivered += 1
+                with self._stats_lock:
+                    self._delivered += 1
                 self.ff_send_out(hold.pop(nxt))
                 nxt += 1
         # completeness invariant: on a clean end of stream every routed item
@@ -719,17 +772,18 @@ class ProcessA2ANode(FFNode):
 
     # -- stats ---------------------------------------------------------------
     def node_stats(self) -> dict:
-        return {
-            "node": self._label,
-            "backend": "process",
-            "left_workers": self._nL,
-            "right_workers": self._nR,
-            "items": self._seq,
-            "delivered": self._delivered,
-            "routed_per_left_worker": list(self._routed),
-            "svc_time_ema_s": self.svc_time_ema,
-            # grid high-water marks are producer-local (they live in the
-            # left children), so only the parent-fed input lanes report here
-            "max_lane_depth": max((l.max_depth for l in self._spmc.lanes),
-                                  default=0),
-        }
+        with self._stats_lock:
+            return {
+                "node": self._label,
+                "backend": "process",
+                "left_workers": self._nL,
+                "right_workers": self._nR,
+                "items": self._seq,
+                "delivered": self._delivered,
+                "routed_per_left_worker": list(self._routed),
+                "svc_time_ema_s": self.svc_time_ema,
+                # grid high-water marks are producer-local (they live in the
+                # left children), so only the parent-fed input lanes report
+                "max_lane_depth": max(
+                    (l.max_depth for l in self._spmc.lanes), default=0),
+            }

@@ -142,6 +142,8 @@ class ShmSPSCQueue:
         self._buf[off:off + 8] = v.to_bytes(8, "little")
 
     def __len__(self) -> int:
+        if self._buf is None:           # detached/destroyed: nothing queued
+            return 0
         return (self._load(_OFF_TAIL) - self._load(_OFF_HEAD)) % self._cap
 
     def empty(self) -> bool:

@@ -72,7 +72,7 @@ class DataPipeline:
     def __init__(self, source, shardings=None, n_batches: Optional[int] = None,
                  prefetch: int = 2, compute: Optional[Callable] = None,
                  plan=None, compute_workers: Union[int, str] = 1,
-                 shm_slot_bytes: int = 1 << 20):
+                 shm_slot_bytes: int = 1 << 20, adaptive: bool = False):
         self.source = source
         placements = None
         if compute is not None and compute_workers not in (None, 1):
@@ -98,12 +98,23 @@ class DataPipeline:
             plan if compute is not None else None,
             capacity=max(2, prefetch), results_capacity=max(2, prefetch),
             device_batch=1, placements=placements,
-            shm_slot_bytes=shm_slot_bytes)
+            shm_slot_bytes=shm_slot_bytes, adaptive=adaptive)
         self.placements = getattr(self._runner, "placements", [])
+        # adaptive mode: a Supervisor thread samples the runner's stage
+        # handles, re-places the compute farm live (width + thread/process
+        # tier) from observed stats, and feeds perf_model.observe so the
+        # next compile()'s placement improves.  The ordered-stream contract
+        # holds: adaptive farm collectors are sequence-ordered on both tiers.
+        self.supervisor = None
+        if adaptive:
+            from ..core.runtime import Supervisor
+            self.supervisor = Supervisor(self._runner)
         self._started = False
 
     def start(self) -> "DataPipeline":
         self._runner.start_stream()
+        if self.supervisor is not None:
+            self.supervisor.start()
         self._started = True
         return self
 
@@ -117,16 +128,27 @@ class DataPipeline:
 
     def stats(self) -> dict:
         """Runner stats: per-node service-time EMA, items, lane depths."""
-        return self._runner.stats()
+        s = self._runner.stats()
+        if self.supervisor is not None:
+            s["supervisor"] = self.supervisor.stats()
+        return s
+
+    def replacement_events(self):
+        """Re-placement events (for the launcher's placement report)."""
+        if self.supervisor is not None:
+            return list(self.supervisor.events)
+        return self._runner.replacement_events()
 
     def stop(self) -> None:
         # drain: sources are finite or the process exits with daemon threads
-        pass
+        if self.supervisor is not None:
+            self.supervisor.stop()
 
 
 def make_pipeline(source, plan=None, n_batches=None, prefetch: int = 2,
                   compute: Optional[Callable] = None,
-                  compute_workers: Union[int, str] = 1) -> DataPipeline:
+                  compute_workers: Union[int, str] = 1,
+                  adaptive: bool = False) -> DataPipeline:
     shardings = None
     if plan is not None:
         st = source.state()          # peek one batch without consuming it
@@ -142,4 +164,5 @@ def make_pipeline(source, plan=None, n_batches=None, prefetch: int = 2,
             for k, v in probe.items()}
     return DataPipeline(source, shardings, n_batches, prefetch,
                         compute=compute, plan=plan,
-                        compute_workers=compute_workers).start()
+                        compute_workers=compute_workers,
+                        adaptive=adaptive).start()

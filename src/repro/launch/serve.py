@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="attach the runtime Supervisor: live stage stats "
+                         "sampling + cost-model observation (re-placement "
+                         "events land in the placement report)")
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -37,7 +41,7 @@ def main():
     params = init_state(cfg, plan, jax.random.PRNGKey(0))["params"]
 
     eng = InferenceEngine(cfg, plan, params, max_batch=args.max_batch,
-                          cache_len=args.cache_len)
+                          cache_len=args.cache_len, adaptive=args.adaptive)
     print(f"engine graph: {eng.graph.describe()}")
     for desc, p in eng.placements:
         print(f"  [{p.target:6s}] {desc}")
@@ -64,6 +68,13 @@ def main():
           f"{dt:.2f}s ({total_toks/dt:.1f} tok/s); decode steps={eng.steps}")
     print("engine graph stats (svc-time EMA / items / lane depths):")
     print("  " + json.dumps(eng.stats(), default=str))
+    if args.adaptive:
+        events = eng.replacement_events()
+        print(f"re-placement events: {len(events)}"
+              + (f" (supervisor {eng.supervisor.stats()})"
+                 if eng.supervisor else ""))
+        for e in events:
+            print(f"  {e}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,10 @@ def main():
                     help="CPU-sized reduction of the arch")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive data pipeline: a runtime Supervisor "
+                         "re-places eligible farm stages live and feeds "
+                         "observed costs back into the calibration cache")
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -48,7 +52,8 @@ def main():
     print(f"arch={cfg.name} params={n_params/1e6:.2f}M devices={n_dev}")
 
     src = SyntheticLMSource(cfg.vocab, args.seq, args.batch, seed=0)
-    pipe = make_pipeline(src, plan, n_batches=args.steps + 8)
+    pipe = make_pipeline(src, plan, n_batches=args.steps + 8,
+                         adaptive=args.adaptive)
     print(f"data graph: {pipe.graph.describe()}")
     for desc, p in pipe.placements:
         print(f"  [{p.target:6s}] {desc}")
@@ -65,6 +70,12 @@ def main():
           f"stragglers={out['stragglers']}")
     print("data graph stats (svc-time EMA / items / lane depths):")
     print("  " + json.dumps(pipe.stats(), default=str))
+    if args.adaptive:
+        pipe.stop()                 # joins the supervisor, persists observe()
+        events = pipe.replacement_events()
+        print(f"re-placement events: {len(events)}")
+        for e in events:
+            print(f"  {e}")
 
 
 if __name__ == "__main__":

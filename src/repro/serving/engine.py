@@ -21,6 +21,21 @@ active_mask) is touched by one node at a time.  The host API is the paper's
 accelerator API verbatim: ``run_then_freeze()`` starts the engine,
 ``offload(request)`` submits, ``load_result()`` blocks for the next finished
 request, ``offload(FF_EOS)`` + ``wait()`` shut down.
+
+Adaptive mode
+-------------
+``InferenceEngine(adaptive=True)`` attaches a
+:class:`~repro.core.runtime.Supervisor` to the compiled runner for the
+engine's lifetime (started by ``run_then_freeze``, stopped by ``wait``).
+The engine's own nodes are stateful (slot scheduler, batched caches), so
+they are never re-placed — here the supervisor is the *observer* half of
+the adaptive runtime: it samples every stage's service-time EMA and lane
+depths mid-serve through the uniform ``StageHandle`` surface (safe: stats
+snapshot under their locks), exposes them via ``engine.stats()``, and feeds
+``perf_model.observe`` so measured decode/admit service times refine the
+calibration the NEXT ``compile()`` places with.  Any adaptive farm stage a
+future graph adds (e.g. a tokenizer farm in front of admission) would be
+resized/migrated live by the same supervisor with no engine change.
 """
 
 from __future__ import annotations
@@ -196,7 +211,8 @@ class InferenceEngine:
     accelerator surface (the compat adapter is ``HostRunner``)."""
 
     def __init__(self, cfg, plan, params, *, max_batch: int = 4,
-                 cache_len: int = 256, eos_token: Optional[int] = None):
+                 cache_len: int = 256, eos_token: Optional[int] = None,
+                 adaptive: bool = False):
         self.cfg = cfg
         self.plan = plan
         self.params = params
@@ -227,8 +243,16 @@ class InferenceEngine:
         # feedback loop to host threads — the SPMD decode step inside
         # DecodeNode is already the device side of the program
         self._runner = self.graph.compile(capacity=self.max_pending,
-                                          results_capacity=1024)
+                                          results_capacity=1024,
+                                          adaptive=adaptive)
         self.placements = getattr(self._runner, "placements", [])
+        # adaptive mode (module docstring): a Supervisor samples the running
+        # engine's stages and feeds the cost model; started/stopped with the
+        # engine's own lifecycle below
+        self.supervisor = None
+        if adaptive:
+            from ..core.runtime import Supervisor
+            self.supervisor = Supervisor(self._runner)
 
     @property
     def steps(self) -> int:
@@ -240,7 +264,16 @@ class InferenceEngine:
 
     def stats(self) -> dict:
         """Runner stats: per-node service-time EMA, items, lane depths."""
-        return self._runner.stats()
+        s = self._runner.stats()
+        if self.supervisor is not None:
+            s["supervisor"] = self.supervisor.stats()
+        return s
+
+    def replacement_events(self):
+        """Re-placement events (for the launcher's placement report)."""
+        if self.supervisor is not None:
+            return list(self.supervisor.events)
+        return self._runner.replacement_events()
 
     # -- caches -----------------------------------------------------------------
     def _insert_impl(self, caches, new_cache, cur_tok, pos, slot, tok, p):
@@ -256,7 +289,10 @@ class InferenceEngine:
 
     # -- paper accelerator API -----------------------------------------------------
     def run_then_freeze(self) -> int:
-        return self._runner.run_then_freeze()
+        rc = self._runner.run_then_freeze()
+        if self.supervisor is not None:
+            self.supervisor.start()
+        return rc
 
     def offload(self, req) -> None:
         """Submit a request (single producer, as in the paper's accelerator
@@ -278,4 +314,7 @@ class InferenceEngine:
         return self._runner.load_result_nb()
 
     def wait(self, timeout: Optional[float] = None) -> int:
-        return self._runner.wait(timeout)
+        rc = self._runner.wait(timeout)
+        if self.supervisor is not None and self.supervisor._thread is not None:
+            self.supervisor.stop()
+        return rc

@@ -208,3 +208,30 @@ def test_bubble_fraction_and_microbatch_choice():
 def test_amdahl():
     assert pm.amdahl(0.0, 16) == pytest.approx(16.0)
     assert pm.amdahl(1.0, 16) == pytest.approx(1.0)
+
+
+def test_svc_time_ema_warmup_median_seed():
+    """A slow first call (jit trace, cold cache) must not poison the
+    service-time EMA: the estimate seeds from the median of the first 5
+    samples, so after a handful of fast items it reflects steady state."""
+    import time
+
+    class SlowFirst(FFNode):
+        def __init__(self):
+            super().__init__()
+            self.calls = 0
+
+        def svc(self, t):
+            self.calls += 1
+            time.sleep(0.1 if self.calls == 1 else 0.001)
+            return t
+
+    node = SlowFirst()
+    p = Pipeline(Counter(10), node, FnNode(lambda t: GO_ON))
+    assert p.run_and_wait_end() == 0
+    # old first-sample seeding left ~13ms here after 10 items; the median
+    # seed lands near the 1ms steady state
+    assert node.svc_time_ema < 0.005, node.svc_time_ema
+    stats = node.node_stats()
+    assert stats["items"] == 10
+    assert stats["svc_time_ema_s"] == pytest.approx(node.svc_time_ema)

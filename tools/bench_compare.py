@@ -2,11 +2,18 @@
 """Gate CI on benchmark regressions: compare a fresh ``BENCH_graph.json``
 against the committed ``benchmarks/BENCH_baseline.json``.
 
-Only *throughput-shaped* fields are compared — ``items_per_s`` (higher is
-better) and ``ratio_best`` (the best demonstrated pair ratio of an
-interleaved thread-vs-process run, higher is better).  Raw ``us_per_call``
-latencies are deliberately ignored.  Two mechanisms keep the gate from
-flapping on heterogeneous/noisy CI runners:
+Gated fields, by shape:
+
+- ``items_per_s`` (higher is better) and ``ratio_best`` (the best
+  demonstrated pair ratio of an interleaved comparison run, higher is
+  better) fail below ``(1 - max_regression)`` of the baseline;
+- ``reconfig_latency_ms`` (lower is better — the adaptive runtime's live
+  drain-and-swap cost) fails above ``(1 + max_latency_increase)`` of the
+  baseline; the default bound is generous (2.0 = 3x) because the swap
+  forks worker processes, which is noisy on shared hosts.
+
+Raw ``us_per_call`` latencies are deliberately ignored.  Two mechanisms
+keep the gate from flapping on heterogeneous/noisy CI runners:
 
 - ``ratio_best`` values are machine-relative by construction (best of
   interleaved thread-vs-process pairs, both sides sharing the same noise
@@ -72,10 +79,14 @@ def _ref_scale(new: dict, base: dict, reference: str) -> tuple[float, str]:
 
 
 def compare(new: dict, base: dict, max_regression: float,
-            reference: str) -> int:
+            reference: str,
+            max_latency_increase: float = 2.0) -> list:
+    """Compare every gated metric; returns the list of failing metric names
+    (ALL of them — one run reports the full damage, never just the first
+    regression encountered)."""
     scale, note = _ref_scale(new, base, reference)
     print(f"bench-compare: {note}")
-    failures = 0
+    failed = []
     rows = []
     for name in sorted(set(new) | set(base)):
         n_rec, b_rec = new.get(name), base.get(name)
@@ -83,12 +94,15 @@ def compare(new: dict, base: dict, max_regression: float,
             # a metric the baseline knows but this run did not record: a
             # silently dropped bench would otherwise un-gate itself
             rows.append((name, "-", "MISSING from new run", "FAIL"))
-            failures += 1
+            failed.append(name)
             continue
         if b_rec is None:
             rows.append((name, "-", "new metric (no baseline)", "info"))
             continue
-        for field, norm in (("items_per_s", scale), ("ratio_best", 1.0)):
+        # (field, machine-speed normalization, higher-is-better?)
+        for field, norm, hib in (("items_per_s", scale, True),
+                                 ("ratio_best", 1.0, True),
+                                 ("reconfig_latency_ms", 1.0 / scale, False)):
             if field not in n_rec or field not in b_rec:
                 continue
             if field == "items_per_s" and name == reference:
@@ -103,16 +117,19 @@ def compare(new: dict, base: dict, max_regression: float,
                 continue
             rel = (n_val * norm) / b_val
             status = "ok"
-            if rel < 1.0 - max_regression:
+            if hib and rel < 1.0 - max_regression:
                 status = "FAIL"
-                failures += 1
+            elif not hib and rel > 1.0 + max_latency_increase:
+                status = "FAIL"
+            if status == "FAIL":
+                failed.append(f"{name}.{field}")
             rows.append((f"{name}.{field}",
                          f"{b_val:g} -> {n_val:g}",
                          f"{(rel - 1.0) * 100:+.1f}% normalized", status))
     width = max((len(r[0]) for r in rows), default=10)
     for name, vals, delta, status in rows:
         print(f"  {name:<{width}}  {vals:>24}  {delta:>26}  [{status}]")
-    return failures
+    return failed
 
 
 def main() -> None:
@@ -126,6 +143,10 @@ def main() -> None:
                     help="metric whose items_per_s serves as the machine-"
                          "speed yardstick both runs are normalized by "
                          f"(default: {DEFAULT_REFERENCE})")
+    ap.add_argument("--max-latency-increase", type=float, default=2.0,
+                    help="relative (normalized) growth of a lower-is-better "
+                         "latency metric (reconfig_latency_ms) that fails "
+                         "the gate (default 2.0 = fails above 3x baseline)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline file from the new run "
                          "instead of gating")
@@ -144,13 +165,18 @@ def main() -> None:
     new, base = load(args.new), load(args.baseline)
     print(f"bench-compare: {args.new} vs {args.baseline} "
           f"(fail below {(1 - args.max_regression) * 100:.0f}% of baseline)")
-    failures = compare(new, base, args.max_regression, args.reference)
-    if failures:
-        print(f"bench-compare: {failures} metric(s) regressed more than "
-              f"{args.max_regression * 100:.0f}% — failing the gate",
+    failed = compare(new, base, args.max_regression, args.reference,
+                     args.max_latency_increase)
+    if failed:
+        print(f"bench-compare: {len(failed)} metric(s) regressed past "
+              f"tolerance — failing the gate: {', '.join(failed)}",
               file=sys.stderr)
+        print("bench-compare: if this change is intended (new tradeoff, "
+              "new hardware), refresh the baseline with:\n"
+              f"  python tools/bench_compare.py {args.new} {args.baseline} "
+              "--update", file=sys.stderr)
         sys.exit(1)
-    print("bench-compare: all throughput metrics within tolerance")
+    print("bench-compare: all gated metrics within tolerance")
 
 
 if __name__ == "__main__":
