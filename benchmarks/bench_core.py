@@ -14,13 +14,15 @@ equivalents of these claims are exercised by the dry-run roofline instead
 ``bench_adaptive`` measures the adaptive runtime's two costs: the live
 drain-and-swap reconfiguration latency (``reconfig_latency_ms``) and the
 throughput overhead of an attached sampling Supervisor (as a
-plain-vs-supervised ratio).
+plain-vs-supervised ratio).  ``bench_net_hop`` measures the distributed
+tier's channel: loopback ``NetLane`` round-trip to a worker pool
+(``net_rtt_us``) and pipelined credit-window streaming throughput.
 
 The ``--smoke`` JSON artifact carries machine-readable ``items_per_s`` /
-``ratio_best`` / ``reconfig_latency_ms`` fields per metric; CI's
-bench-compare step fails the build when throughput regresses >30% or the
-reconfig latency grows past its (generous, machine-normalized) bound
-against the committed ``benchmarks/BENCH_baseline.json`` (see
+``ratio_best`` / ``reconfig_latency_ms`` / ``net_rtt_us`` fields per
+metric; CI's bench-compare step fails the build when throughput regresses
+>30% or a latency metric grows past its (generous, machine-normalized)
+bound against the committed ``benchmarks/BENCH_baseline.json`` (see
 ``tools/bench_compare.py``).
 """
 
@@ -392,6 +394,88 @@ def _adaptive_light_task(x):
     return x * 1.0017
 
 
+# --- distributed tier: the loopback network-lane hop ---------------------------
+def _net_echo_task(x):
+    """Identity worker: the bench isolates the lane, not the work."""
+    return x
+
+
+def bench_net_hop(smoke: bool = False):
+    """The distributed tier's channel costs the CI gate watches:
+
+    - ``net_rtt_us``: best round-trip of one item through a loopback
+      ``NetLane`` to a ``worker_main`` pool and back — the per-item price
+      of leaving the host, and the floor under every ``host_remote``
+      placement decision (``perf_model`` calibrates ``net_hop_s`` from the
+      same loopback measurement);
+    - ``net_stream``: pipelined throughput over the same lane with the
+      credit window keeping items in flight — what a remote farm's
+      emitter/collector actually sustains."""
+    import statistics
+    import threading
+
+    import numpy as np
+    from repro.core.net import NetLane, spawn_loopback_pool
+    from repro.core.shm import WorkerStats
+
+    n_ping = 50 if smoke else 200
+    n_stream = 256 if smoke else 1024
+    x = np.linspace(1.0, 2.0, 8, dtype=np.float32)
+
+    def pop_data(timeout=60.0):
+        while True:                 # periodic WorkerStats ride the same lane
+            item, _ = lane.pop_seq(timeout=timeout)
+            if not isinstance(item, WorkerStats):
+                return item
+
+    addrs, procs = spawn_loopback_pool(1)
+    try:
+        lane = NetLane.connect(*addrs[0], credit=64)
+        try:
+            lane.push_fn(_net_echo_task)
+            seq = 0
+            lane.push(x, timeout=30.0, seq=seq)     # warm the path
+            pop_data()
+            seq += 1
+            rtts = []
+            for _ in range(n_ping):
+                t0 = time.perf_counter()
+                lane.push(x, timeout=30.0, seq=seq)
+                pop_data()
+                rtts.append(time.perf_counter() - t0)
+                seq += 1
+
+            def feed(base):
+                for i in range(n_stream):
+                    lane.push(x, timeout=60.0, seq=base + i)
+            t = threading.Thread(target=feed, args=(seq,), daemon=True)
+            t0 = time.perf_counter()
+            t.start()
+            for _ in range(n_stream):
+                pop_data()
+            dt = time.perf_counter() - t0
+            t.join()
+            lane.push_eos()
+        finally:
+            lane.shutdown()
+    finally:
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            p.join(timeout=10.0)
+    best_rtt = min(rtts)
+    per_item = dt / n_stream
+    return [
+        ("net_hop_roundtrip", best_rtt * 1e6,
+         f"best of {n_ping} loopback ping-pongs; median="
+         f"{statistics.median(rtts)*1e6:.0f}us",
+         {"net_rtt_us": round(best_rtt * 1e6, 1)}),
+        ("net_stream", per_item * 1e6,
+         f"{1/per_item:.0f}items/s pipelined over a credit-64 lane",
+         {"items_per_s": round(1 / per_item, 1)}),
+    ]
+
+
 def bench_adaptive(smoke: bool = False):
     """The adaptive-runtime costs the CI gate watches:
 
@@ -505,6 +589,7 @@ def main() -> None:
                lambda: bench_hybrid_pipeline(args.smoke),
                lambda: bench_farm_backends(args.smoke),
                lambda: bench_a2a_backends(args.smoke),
+               lambda: bench_net_hop(args.smoke),
                lambda: bench_adaptive(args.smoke)]
     if not args.smoke:
         benches += [bench_spsc_queue, bench_farm_speedup,

@@ -2,12 +2,16 @@
 adapted from shared-memory multicores to TPU pods, unified behind one
 composable *building blocks* graph API and one staged graph compiler.
 
-Layer 1-2 (``core.queues``, ``core.shm``): lock-free SPSC ring buffers,
-composed into SPMC / MPSC / MPMC networks — the channels every host skeleton
-runs over.  ``core.queues`` is the thread-tier instance; ``core.shm`` lays
-the same fixed-slot ring out in ``multiprocessing.shared_memory`` (raw-numpy
-slab fast path, pickled-bytes fallback) so the ring crosses OS processes —
-FastFlow's actual multicore claim.
+Layer 1-2 (``core.queues``, ``core.shm``, ``core.net``): lock-free SPSC
+ring buffers, composed into SPMC / MPSC / MPMC networks — the channels every
+host skeleton runs over.  ``core.queues`` is the thread-tier instance;
+``core.shm`` lays the same fixed-slot ring out in
+``multiprocessing.shared_memory`` (raw-numpy slab fast path, pickled-bytes
+fallback) so the ring crosses OS processes — FastFlow's actual multicore
+claim; ``core.net`` speaks the same slot protocol over TCP (length-prefixed
+frames, u64 seqs, EOS/ERR control, plus credit-window back-pressure and
+heartbeats) so the lane crosses the *host* boundary — the distributed
+tier.
 
 Layer 3 (``core.node``, ``core.skeletons``): the paper-faithful host
 runtime — ``ff_node`` (``svc``/``svc_init``/``svc_end``), ``Pipeline``,
@@ -33,15 +37,23 @@ explicit stages —
    steps) or ``False`` on ones that hold it (pure-Python / small-array
    numpy); undeclared workers are probed by timing the node solo vs. under
    two concurrent threads when a ``sample`` is available;
-3. **place**: a ``Placement`` per top-level stage across the three-backend
-   host tier plus the mesh — host *thread*, host *process* (a GIL-bound
+3. **place**: a ``Placement`` per top-level stage across the *four-tier*
+   host side plus the mesh — host *thread*, host *process* (a GIL-bound
    farm or ``all_to_all`` gains true parallelism worth more than the
-   shared-memory hop), or *device* — consuming the constants
+   shared-memory hop), host *remote* (``host_remote``: the farm's workers
+   live in ``python -m repro.launch.worker`` pools on other hosts, reached
+   over the network lanes of ``core.net`` and unlocked by
+   ``compile(remote_workers=["host:port", ...])`` — chosen when
+   parallelism over the network hop beats both on-box tiers, or forced
+   with ``mode="remote"``), or *device* — consuming the constants
    ``perf_model.calibrate()`` measures at startup (host peak FLOP/s,
-   thread-queue hop, process-lane hop, device dispatch; cached on disk,
-   ``REPRO_FF_CACHE``/``XDG_CACHE_HOME``-relocatable for hermetic CI)
-   instead of baked-in defaults; farm width from ``choose_farm_width``,
-   a2a service time from ``a2a_service_time``; all overridable per node;
+   thread-queue hop, process-lane hop, loopback network hop, device
+   dispatch; cached on disk,
+   ``REPRO_FF_CACHE``/``XDG_CACHE_HOME``-relocatable for hermetic CI, and
+   degrading to in-memory constants with a warning when the cache dir is
+   unwritable) instead of baked-in defaults; farm width from
+   ``choose_farm_width``, a2a service time from ``a2a_service_time``; all
+   overridable per node;
 4. **emit**: ``HostRunner`` (threads over SPSC queues), ``ProcessRunner``
    (process-placed farms run OS-process workers over the shared-memory
    rings of ``core.shm``, bridged into the thread network by
@@ -50,11 +62,17 @@ explicit stages —
    process-placed ``all_to_all`` stages run left/right worker processes
    over the ``core.shm.ShmMPMCGrid`` lane grid via
    ``core.process.ProcessA2ANode``, the router shipped to the left
-   children and sequence numbers riding the slot headers), ``DeviceRunner``
-   (the mesh via ``core.device``), or the *hybrid* runner — host stages
-   over SPSC queues feeding device segments through device-put boundary
-   nodes.  Thread -> process -> device programs compose in one graph;
-   every block (farm, pipeline, a2a) now has all three backends.
+   children and sequence numbers riding the slot headers),
+   ``RemoteRunner`` (remote-placed farms run ``core.net.RemoteFarmNode``
+   boundary nodes: per-worker TCP lanes with a bounded credit window,
+   sequence-ordered collection, heartbeat crash surfacing, and
+   ``set_active``-driven *cluster autoscaling* — AutoscaleLB and the
+   runtime Supervisor grow/shrink the active remote worker set from
+   observed lane depth), ``DeviceRunner`` (the mesh via ``core.device``),
+   or the *hybrid* runner — host stages over SPSC queues feeding device
+   segments through device-put boundary nodes.  Thread -> process ->
+   remote -> device programs compose in one graph; every block has a
+   backend on each eligible tier.
 
 ``emit`` covers every block on both targets: farms are ``shard_map`` over
 the data axis, ``all_to_all`` lowers to MoE-style dispatch/combine
@@ -98,8 +116,10 @@ from .graph import (A2ASkeleton, Deliver, FFGraph, GraphError, Runner,
                     StageHandle, all_to_all, farm, ffmap, pipeline, seq)
 from .graph import HostRunner, DeviceRunner
 from .process import ProcessA2ANode, ProcessFarmNode, WorkerCrashed
+from .net import (NetLane, RemoteFarmNode, RemoteStageHandle,
+                  spawn_loopback_pool, worker_main)
 from .compiler import (CostEstimate, HybridRunner, Placement, ProcessRunner,
-                       annotate, compile_graph, emit, place)
+                       RemoteRunner, annotate, compile_graph, emit, place)
 from .runtime import (AdaptiveFarmNode, AdaptiveStageHandle,
                       ReplacementEvent, Supervisor)
 from .accelerator import JaxAccelerator
@@ -116,6 +136,8 @@ __all__ = [
     "FFGraph", "GraphError", "Deliver", "Runner", "StageHandle",
     "HostRunner", "DeviceRunner", "HybridRunner", "ProcessRunner",
     "A2ASkeleton", "ProcessFarmNode", "ProcessA2ANode", "WorkerCrashed",
+    "NetLane", "RemoteFarmNode", "RemoteStageHandle", "RemoteRunner",
+    "spawn_loopback_pool", "worker_main",
     "AdaptiveFarmNode", "AdaptiveStageHandle", "ReplacementEvent",
     "Supervisor",
     "seq", "pipeline", "farm", "ffmap", "all_to_all",

@@ -15,11 +15,14 @@ layers arbitrary networks over its core channels:
    measures a *GIL-sensitivity* signal (the node timed solo vs. under two
    concurrent threads) unless the worker declares ``ff_releases_gil``;
 3. **place** — assign each top-level stage a :class:`Placement` across the
-   three-backend host tier plus the mesh: host *thread* vs. host *process*
-   vs. *device*.  Thread-vs-process comes from the GIL signal and the
-   startup-calibrated hop costs (``perf_model.calibrate`` replaces the
-   baked-in constants with measured ones); host-vs-device from the roofline
-   comparison; farm widths from
+   four-tier host side plus the mesh: host *thread* vs. host *process* vs.
+   host *remote* (``host_remote``, a worker pool on other hosts reached
+   over the TCP lanes of ``core/net.py`` — unlocked by
+   ``compile(remote_workers=[...])``) vs. *device*.  Thread-vs-process-vs-
+   remote comes from the GIL signal and the startup-calibrated hop costs
+   (``perf_model.calibrate`` replaces the baked-in constants with measured
+   ones, including the loopback-measured network hop); host-vs-device from
+   the roofline comparison; farm widths from
    :func:`~repro.core.perf_model.choose_farm_width`; all overridable per
    node;
 4. **emit** — build the runner: all-host -> :class:`~repro.core.graph.
@@ -31,7 +34,11 @@ layers arbitrary networks over its core channels:
    stages become :class:`~repro.core.process.ProcessA2ANode` (left/right
    worker processes over an ``ShmMPMCGrid`` lane grid, router in the left
    children, sequence-ordered collection) inside a
-   :class:`ProcessRunner`; mixed host/device -> :class:`HybridRunner`, host
+   :class:`ProcessRunner`; remote-placed farm stages become
+   :class:`~repro.core.net.RemoteFarmNode` boundary nodes (workers on
+   other hosts over credit-windowed TCP lanes, sequence-ordered, crash-
+   surfacing, cluster-autoscaling) inside a :class:`RemoteRunner`; mixed
+   host/device -> :class:`HybridRunner`, host
    stages over SPSC queues feeding device segments on the mesh through
    device-put boundary nodes (:class:`_DeviceStageNode` stacks a microbatch,
    ``device_put``s it with the data-axis sharding, runs the jitted segment,
@@ -50,8 +57,9 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import pickle
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import perf_model as pm
 from .graph import (A2AG, DeviceRunner, FarmG, FFGraph, GraphError,
@@ -69,7 +77,7 @@ HOST_QUEUE_OVERHEAD_S = 2e-5
 DEVICE_DISPATCH_S = 2e-5
 DEFAULT_T_TASK_S = 5e-5
 
-_TARGETS = ("host", "host_process", "device")
+_TARGETS = ("host", "host_process", "host_remote", "device")
 
 
 @dataclasses.dataclass
@@ -99,6 +107,11 @@ class CostEstimate:
         parallelism, floored by the shared-memory lane hop."""
         return max(self.t_task / max(1, width), hop_s)
 
+    def remote_time(self, width: int = 1, hop_s: float = 5e-4) -> float:
+        """Per-item service time on a ``width``-worker *remote* farm: true
+        parallelism across hosts, floored by the network-lane hop."""
+        return max(self.t_task / max(1, width), hop_s)
+
     def device_time(self, n_chips: int = 1,
                     dispatch_s: float = DEVICE_DISPATCH_S) -> Optional[float]:
         """Roofline per-item time on the mesh, or None when no work terms
@@ -115,7 +128,7 @@ class Placement:
     (threads, processes, or the mesh axis size); ``reason`` records the
     cost-model comparison for reports/tests."""
 
-    target: str = "host"        # "host" | "host_process" | "device"
+    target: str = "host"    # "host" | "host_process" | "host_remote" | "device"
     width: Optional[int] = None
     reason: str = ""
 
@@ -340,27 +353,69 @@ def _process_ineligible_reason(n: Any) -> Optional[str]:
     return None
 
 
+def _net_picklable(fn: Callable) -> bool:
+    # the remote tier ships the callable over TCP (tag FN), so it must
+    # pickle *by value or importable reference* for real — the fork-based
+    # leniency of fn_picklable() does not cross a host boundary
+    try:
+        pickle.dumps(fn)
+        return True
+    except Exception:   # noqa: BLE001 - closures, lambdas, local defs
+        return False
+
+
+def _remote_ineligible_reason(n: Any,
+                              pool: Optional[Sequence]) -> Optional[str]:
+    """Why this stage cannot run on the remote tier (None when it can).
+
+    The remote tier ships each worker's ``svc`` callable over a network lane
+    (tag ``FN``) to a worker pool from ``compile(remote_workers=[...])``, so
+    beyond the process tier's purity requirements the callable must
+    genuinely pickle (fork cannot carry a closure across hosts) and a pool
+    must exist to connect to.  Farms only — the a2a grid stays on-box."""
+    if not isinstance(n, FarmG):
+        return "only farm stages remote-lower"
+    if not pool:
+        return "no remote worker pool (pass compile(remote_workers=[...]))"
+    if n.lb is not None or n.ondemand is not None:
+        return "custom lb/ondemand schedules are thread-tier only"
+    fns = [n.fn] if n.fn is not None else [_pure_of(w) for w in n.workers]
+    if any(f is None for f in fns):
+        return "stateful workers cannot ship to a remote worker"
+    for part in (n.emitter, n.collector):
+        if part is not None and _pure_of(part) is None:
+            return "remote farm needs pure emitter/collector"
+    if not all(_net_picklable(f) for f in fns):
+        return "worker callable does not pickle for the network handshake"
+    return None
+
+
 def _mesh_axis_size(plan: Any, axis: str) -> int:
     return int(dict(plan.mesh.shape).get(axis, 1))
 
 
 def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
           axis: str = "data", feedback_steps: Optional[int] = None,
-          mode: str = "auto") -> FFGraph:
+          mode: str = "auto",
+          remote_pool: Optional[Sequence] = None) -> FFGraph:
     """Assign each top-level stage a :class:`Placement` (in place).
 
-    Targets span the three-backend host tier plus the mesh: a stage goes to
+    Targets span the four-tier host side plus the mesh: a stage goes to
     the *device* when it can lower there, a plan was given, and the roofline
     estimate beats the best host service time; a farm of GIL-bound workers
     goes to the *process* tier when true parallelism over the calibrated
-    shared-memory hop beats GIL-serialized threads; everything else runs on
-    host *threads*.  Widths come from
+    shared-memory hop beats GIL-serialized threads, or to the *remote* tier
+    (``host_remote``) when a worker pool (``remote_pool``, the compile
+    call's ``remote_workers=``) is wide enough that parallelism over the
+    calibrated network hop beats both; everything else runs on host
+    *threads*.  Widths come from
     :func:`~repro.core.perf_model.choose_farm_width` over the calibrated
     channel costs.  ``overrides`` maps a stage index or worker object (the
     callable/FFNode the stage was built from) to a :class:`Placement` (or
-    ``"host"``/``"host_process"``/``"device"``).  A ``wrap_around`` graph
-    places on the device only as a whole (every stage eligible) and only
-    when ``feedback_steps`` says how many synchronous turns to run."""
+    ``"host"``/``"host_process"``/``"host_remote"``/``"device"``).  A
+    ``wrap_around`` graph places on the device only as a whole (every stage
+    eligible) and only when ``feedback_steps`` says how many synchronous
+    turns to run."""
     overrides = overrides or {}
     stages = _top_stages(graph)
     n_cpu = max(1, os.cpu_count() or 1)
@@ -374,11 +429,13 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
         c = s.cost
         return isinstance(c, CostEstimate) and c.releases_gil is False
 
-    need_measure = mode == "process" or (
+    need_measure = mode in ("process", "remote") or (
         mode == "auto" and not graph._wrap
-        and any(_process_ineligible_reason(s) is None and _gil_bound(s)
-                for s in stages))
+        and any((_process_ineligible_reason(s) is None
+                 or _remote_ineligible_reason(s, remote_pool) is None)
+                and _gil_bound(s) for s in stages))
     calib = pm.get_calibration(measure=need_measure)
+    n_pool = len(remote_pool) if remote_pool else 0
 
     def override_for(i: int, s: Any) -> Optional[Placement]:
         # keys are stage indices or the hashable user objects a stage wraps
@@ -428,13 +485,22 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
         else:
             host_width = 1
             proc_width = 1
+        remote_reason = _remote_ineligible_reason(s, remote_pool)
+        # a replicated farm spreads over the whole pool; a fixed worker
+        # list caps at its own width (one pool address per callable)
+        remote_width = 0 if not isinstance(s, FarmG) else (
+            n_pool if (s.n_auto or s.fn is not None)
+            else min(len(s.workers), n_pool))
         if ov is not None:
             if ov.target == "host_process" and proc_reason is not None:
                 raise GraphError(f"stage {i} ({s.describe()}) cannot be "
                                  f"process-placed: {proc_reason}")
+            if ov.target == "host_remote" and remote_reason is not None:
+                raise GraphError(f"stage {i} ({s.describe()}) cannot be "
+                                 f"remote-placed: {remote_reason}")
             if ov.width is None:
                 w = {"device": n_chips, "host_process": proc_width,
-                     "host": host_width}[ov.target]
+                     "host_remote": remote_width, "host": host_width}[ov.target]
                 ov = dataclasses.replace(ov, width=w)
             s.placement = ov
             continue
@@ -448,6 +514,14 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
             else:
                 s.placement = Placement("host", host_width,
                                         f"forced process, but {proc_reason}")
+            continue
+        if mode == "remote":
+            if remote_reason is None:
+                s.placement = Placement("host_remote", remote_width,
+                                        "forced remote")
+            else:
+                s.placement = Placement("host", host_width,
+                                        f"forced remote, but {remote_reason}")
             continue
         if mode == "device":
             s.placement = Placement("device", n_chips, "forced device")
@@ -490,16 +564,35 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
                 t = c.process_time(proc_width, calib.proc_hop_s)
             if t < 0.8 * host_t:
                 proc_t = t
+        # the remote tier competes on the same terms: GIL-bound work wide
+        # enough to amortize the (much larger) network hop, past the same
+        # hysteresis margin — and it must also beat the on-box process tier
+        remote_t = None
+        if remote_reason is None and c.releases_gil is False \
+                and remote_width >= 2:
+            t = c.remote_time(remote_width, calib.net_hop_s)
+            if t < 0.8 * host_t and (proc_t is None or t < proc_t):
+                remote_t = t
         candidates = {"host": host_t}
         if dev_t is not None:
             candidates["device"] = dev_t
         if proc_t is not None:
             candidates["host_process"] = proc_t
+        if remote_t is not None:
+            candidates["host_remote"] = remote_t
         target = min(candidates, key=candidates.get)
         if target == "device":
             s.placement = Placement(
                 "device", n_chips,
                 f"roofline {dev_t*1e6:.1f}us < host {host_t*1e6:.1f}us")
+        elif target == "host_remote":
+            s.placement = Placement(
+                "host_remote", remote_width,
+                ("autoscale on the remote tier: " if autoscale else "")
+                + f"GIL-bound: {remote_width} remote workers "
+                f"{remote_t*1e6:.1f}us < threads {host_t*1e6:.1f}us "
+                f"(calibrated net hop {calib.net_hop_s*1e6:.1f}us, "
+                f"{calib.source})")
         elif target == "host_process":
             s.placement = Placement(
                 "host_process", proc_width,
@@ -687,6 +780,38 @@ class ProcessRunner(HostRunner):
     stages and process farms share one streaming network."""
 
 
+class RemoteRunner(HostRunner):
+    """A host network whose remote-placed farm stages run their workers on
+    other hosts over the TCP network lanes of ``core/net.py`` — the
+    distributed tier.  Same surface as :class:`HostRunner`; thread stages,
+    process farms, and remote farms share one streaming network."""
+
+
+def _lower_remote_stage(s: Any, p: Placement,
+                        remote_pool: Optional[Sequence],
+                        credit: int = 32) -> SeqG:
+    """Replace a remote-placed farm with its boundary node
+    (:class:`~repro.core.net.RemoteFarmNode`): to the rest of the
+    (thread-tier) network it is one ordinary host stage whose workers happen
+    to answer over TCP."""
+    from .net import RemoteFarmNode
+    reason = _remote_ineligible_reason(s, remote_pool)
+    if reason is not None:
+        raise GraphError(f"cannot remote-lower {s.describe()}: {reason}")
+    n_pool = len(remote_pool)
+    width = max(1, min(p.width or n_pool, n_pool))
+    fns = [s.fn] * width if s.fn is not None \
+        else [_pure_of(w) for w in s.workers][:width]
+    pre = _pure_of(s.emitter) if s.emitter is not None else None
+    post = _pure_of(s.collector) if s.collector is not None else None
+    node = RemoteFarmNode(
+        fns, list(remote_pool)[:len(fns)], pre=pre, post=post,
+        credit=credit, autoscale=s.autoscale,
+        label=f"remote_farm[{len(fns)}]"
+        + ("@autoscale" if s.autoscale else ""))
+    return SeqG(node)
+
+
 def _lower_process_stage(s: Any, p: Placement, capacity: int,
                          slot_bytes: int) -> SeqG:
     """Replace a process-placed farm or all_to_all with its boundary node:
@@ -734,7 +859,7 @@ def _maybe_adaptive_node(s: Any, p: Placement, capacity: int,
     sequence-ordered on BOTH tiers (output order == input order, matching
     the process/device lowerings and making migration order-safe), which is
     stricter than the plain thread farm's arrival order."""
-    if not isinstance(s, FarmG) or p.target == "device":
+    if not isinstance(s, FarmG) or p.target in ("device", "host_remote"):
         return None
     if s.fn is None or s.lb is not None or s.ondemand is not None:
         return None
@@ -780,7 +905,9 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
          feedback_steps: Optional[int] = None,
          device_batch: Optional[int] = None,
          a2a_capacity_factor: Optional[float] = None,
-         shm_slot_bytes: int = 1 << 16, adaptive: bool = False) -> Any:
+         shm_slot_bytes: int = 1 << 16, adaptive: bool = False,
+         remote_workers: Optional[Sequence] = None,
+         net_credit: int = 32) -> Any:
     """Build the runner for a placed graph (stage 4)."""
     stages = _top_stages(graph)
     placements = [s.placement if isinstance(s.placement, Placement)
@@ -808,10 +935,25 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
         g2._wrap = graph._wrap
         graph, stages = g2, lowered
 
+    # remote-placed farms lower next, into RemoteFarmNode boundary stages
+    # (workers on other hosts over TCP lanes): from here on the rest of
+    # emit sees them as host stages
+    has_remote = any(p.target == "host_remote" for p in placements)
+    if has_remote:
+        lowered = [(_lower_remote_stage(s, p, remote_workers, net_credit)
+                    if p.target == "host_remote" else s)
+                   for s, p in zip(stages, placements)]
+        g2 = FFGraph(lowered[0] if len(lowered) == 1 else PipeG(lowered))
+        g2._wrap = graph._wrap
+        graph, stages = g2, lowered
+        placements = [dataclasses.replace(p, target="host")
+                      if p.target == "host_remote" else p
+                      for p in placements]
+
     # process-placed farms and a2a stages lower next, into
     # ProcessFarmNode / ProcessA2ANode boundary stages: from here on the
     # rest of emit sees them as host stages, which is what lets thread ->
-    # process -> device programs compose freely
+    # process -> device -> remote programs compose freely
     has_process = any(p.target == "host_process" for p in placements)
     if has_process:
         lowered = [(_lower_process_stage(s, p, capacity, shm_slot_bytes)
@@ -831,7 +973,8 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
                               a2a_capacity_factor=a2a_capacity_factor)
     elif targets == {"host"}:
         _materialize_widths(graph.root)
-        cls = ProcessRunner if (has_process or adaptive_proc) else HostRunner
+        cls = RemoteRunner if has_remote else (
+            ProcessRunner if (has_process or adaptive_proc) else HostRunner)
         runner = cls(graph, capacity=capacity,
                      results_capacity=results_capacity)
     else:
@@ -888,7 +1031,9 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
                   device_batch: Optional[int] = None,
                   a2a_capacity_factor: Optional[float] = None,
                   shm_slot_bytes: int = 1 << 16,
-                  adaptive: bool = False) -> Any:
+                  adaptive: bool = False,
+                  remote_workers: Optional[Sequence] = None,
+                  net_credit: int = 32) -> Any:
     """Run the staged pipeline: normalize -> annotate -> place -> emit.
 
     Note: stage-index keys in ``placements=`` refer to the *normalized*
@@ -902,20 +1047,32 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
     stages whose width and thread/process tier a
     :class:`~repro.core.runtime.Supervisor` can change live, from observed
     stats; their collectors are sequence-ordered on both tiers.  With no
-    supervisor attached an adaptive runner behaves like the static one."""
-    if mode not in ("auto", "host", "process", "device"):
+    supervisor attached an adaptive runner behaves like the static one.
+
+    ``remote_workers=["host:port", ...]`` (or ``(host, port)`` tuples)
+    names a pool of :func:`~repro.core.net.worker_main` worker pools and
+    unlocks the ``host_remote`` target: ``place`` costs eligible farms
+    against the calibrated network hop (``mode="remote"`` forces it), and
+    ``emit`` lowers them to :class:`~repro.core.net.RemoteFarmNode`
+    boundary stages with a ``net_credit``-deep in-flight window per lane."""
+    if mode not in ("auto", "host", "process", "remote", "device"):
         raise GraphError(f"unknown compile mode {mode!r}")
     if mode == "device" and plan is None:
         raise GraphError("compile(mode=\"device\") needs a ShardingPlan")
+    if mode == "remote" and not remote_workers:
+        raise GraphError("compile(mode=\"remote\") needs remote_workers="
+                         "[\"host:port\", ...]")
     g = graph.optimize() if normalize else graph
     # forced modes still need costs for width selection (n="auto" farms),
     # so annotate runs whenever the caller supplied cost information
     if mode == "auto" or costs or sample is not None:
         annotate(g, costs=costs, sample=sample)
     place(g, plan, overrides=placements, axis=axis,
-          feedback_steps=feedback_steps, mode=mode)
+          feedback_steps=feedback_steps, mode=mode,
+          remote_pool=remote_workers)
     return emit(g, plan, capacity=capacity,
                 results_capacity=results_capacity, axis=axis,
                 feedback_steps=feedback_steps, device_batch=device_batch,
                 a2a_capacity_factor=a2a_capacity_factor,
-                shm_slot_bytes=shm_slot_bytes, adaptive=adaptive)
+                shm_slot_bytes=shm_slot_bytes, adaptive=adaptive,
+                remote_workers=remote_workers, net_credit=net_credit)

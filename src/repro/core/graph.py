@@ -450,7 +450,9 @@ class FFGraph:
                 a2a_capacity_factor: Optional[float] = None,
                 normalize: bool = True,
                 shm_slot_bytes: int = 1 << 16,
-                adaptive: bool = False) -> "Runner":
+                adaptive: bool = False,
+                remote_workers: Optional[list] = None,
+                net_credit: int = 32) -> "Runner":
         """The staged compile pipeline ``normalize -> annotate -> place ->
         emit`` (core/compiler.py):
 
@@ -464,15 +466,20 @@ class FFGraph:
           parallelism for GIL-bound farms and ``all_to_all`` stages, costed
           with the startup-calibrated constants of ``perf_model.calibrate``;
           GIL-bound ``autoscale`` farms scale their active *process* set
-          from shm lane depth), and the *device*; farm widths from the cost
-          model; overridable via
+          from shm lane depth), host *remote* (``host_remote`` — a farm's
+          workers on other hosts, unlocked by ``remote_workers=`` and
+          costed against the calibrated network hop), and the *device*;
+          farm widths from the cost model; overridable via
           ``placements={stage_index_or_worker_object: ...}``;
         * ``emit`` — :class:`HostRunner`, :class:`DeviceRunner`,
           :class:`~repro.core.compiler.ProcessRunner` (farm workers as OS
           processes over shared-memory SPSC rings; a2a left/right workers
           over the ``ShmMPMCGrid`` lane grid with sequence-ordered
-          collection), or the hybrid runner (host stages over SPSC queues
-          feeding device segments through device-put boundary nodes).
+          collection), :class:`~repro.core.compiler.RemoteRunner` (farm
+          workers on remote hosts over the credit-windowed TCP lanes of
+          ``core/net.py``), or the hybrid runner (host stages over SPSC
+          queues feeding device segments through device-put boundary
+          nodes).
 
         ``feedback_steps=K`` lets a ``wrap_around`` graph lower onto the mesh
         through ``core.device.feedback_scan`` (K synchronous turns of the
@@ -480,7 +487,14 @@ class FFGraph:
         all_to_all expert lanes (default: lossless, host-parity).
         ``shm_slot_bytes`` sizes the fixed shared-memory ring slots of
         process-placed farms (raise it for large batches).  ``mode`` forces
-        placement: "host", "process", "device", or cost-driven "auto".
+        placement: "host", "process", "remote", "device", or cost-driven
+        "auto".
+
+        ``remote_workers=["host:port", ...]`` names a pool of
+        ``python -m repro.launch.worker`` worker pools (or
+        :func:`~repro.core.net.spawn_loopback_pool` addresses) and unlocks
+        the ``host_remote`` target; ``net_credit`` bounds each network
+        lane's in-flight window (back-pressure depth).
 
         ``adaptive=True`` makes eligible farm stages *re-placeable at
         runtime*: they lower to :class:`~repro.core.runtime.AdaptiveFarmNode`
@@ -499,7 +513,9 @@ class FFGraph:
                              a2a_capacity_factor=a2a_capacity_factor,
                              normalize=normalize,
                              shm_slot_bytes=shm_slot_bytes,
-                             adaptive=adaptive)
+                             adaptive=adaptive,
+                             remote_workers=remote_workers,
+                             net_credit=net_credit)
 
     def lower(self, plan: Any = None, *, capacity: int = 512,
               results_capacity: int = 4096, axis: str = "data") -> "Runner":
@@ -956,7 +972,9 @@ class HostRunner(Runner):
     def stage_handles(self) -> List[StageHandle]:
         handles = []
         for st in self._top_members():
-            if getattr(st, "ff_adaptive", False):
+            # a stage that builds its own handle (AdaptiveFarmNode,
+            # net.RemoteFarmNode) knows its tier and reconfig surface
+            if hasattr(st, "make_handle"):
                 handles.append(st.make_handle())
             else:
                 desc = getattr(st, "_label", None) or type(st).__name__

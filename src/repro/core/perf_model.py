@@ -17,6 +17,7 @@ import json
 import math
 import os
 import time
+import warnings
 from typing import Dict, Optional, Sequence
 
 
@@ -186,6 +187,7 @@ class HostCalibration:
     queue_hop_s: float          # per-item thread-tier SPSC push+pop cost
     proc_hop_s: float           # per-item process-lane (shm ring) hop cost
     device_dispatch_s: float    # per-microbatch host<->device boundary cost
+    net_hop_s: float = 5e-4     # per-item network-lane (TCP frame) hop cost
     source: str = "default"
 
     def as_dict(self) -> dict:
@@ -195,9 +197,11 @@ class HostCalibration:
 # conservative fallbacks, used only until/unless calibrate() has run
 DEFAULT_CALIBRATION = HostCalibration(
     peak_flops=5e10, queue_hop_s=2e-5, proc_hop_s=2e-4,
-    device_dispatch_s=2e-5, source="default")
+    device_dispatch_s=2e-5, net_hop_s=5e-4, source="default")
 
-_CALIB_VERSION = 1
+# version 2: net_hop_s joined the constants (version-1 caches predate the
+# distributed tier and must miss cleanly)
+_CALIB_VERSION = 2
 _calibration: Optional[HostCalibration] = None
 
 
@@ -301,6 +305,70 @@ def _measure_proc_hop(n: int = 200) -> float:
     return max(rtt / 2.0, 1e-9)
 
 
+def _measure_net_hop(n: int = 200) -> float:
+    """Per-item network-lane hop cost, measured over loopback TCP with the
+    actual frame codec of ``core/net.py`` (raw-ndarray fast path).  Streamed
+    pipelined like :func:`_measure_proc_hop` — the remote farm's emitter and
+    collector overlap, so the relevant figure is the per-item cost of a full
+    round trip divided by two, not one-frame latency."""
+    import socket
+    import struct
+    import threading
+
+    import numpy as np
+    try:
+        from .net import (TAG_EOS, decode_payload, encode_frame, encode_item,
+                          read_frame)
+        from .shm import _SLOT_FMT
+        ls = socket.create_server(("127.0.0.1", 0))
+        port = ls.getsockname()[1]
+
+        def _echo() -> None:
+            conn, _peer = ls.accept()
+            try:
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                while True:
+                    fr = read_frame(conn)
+                    if fr is None or fr[0] == TAG_EOS:
+                        return
+                    tag, payload, seq = fr
+                    conn.sendall(struct.pack(_SLOT_FMT, len(payload),
+                                             tag, seq) + payload)
+            finally:
+                conn.close()
+
+        echo = threading.Thread(target=_echo, daemon=True,
+                                name="ff-calibrate-net-echo")
+        echo.start()
+        sock = socket.create_connection(("127.0.0.1", port), timeout=5.0)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        frame = encode_item(np.arange(64, dtype=np.float32))
+        try:
+            sock.sendall(frame)                 # warm both directions
+            read_frame(sock)
+            t0 = time.perf_counter()
+
+            def _send() -> None:
+                for _ in range(n):
+                    sock.sendall(frame)
+
+            sender = threading.Thread(target=_send, daemon=True)
+            sender.start()
+            for _ in range(n):
+                tag, payload, _seq = read_frame(sock)
+                decode_payload(tag, payload)
+            rtt = (time.perf_counter() - t0) / n
+            sender.join(timeout=5.0)
+            sock.sendall(encode_frame(TAG_EOS))
+        finally:
+            sock.close()
+            ls.close()
+            echo.join(timeout=5.0)
+        return max(rtt / 2.0, 1e-9)
+    except Exception:   # noqa: BLE001 - no loopback here: keep the default
+        return DEFAULT_CALIBRATION.net_hop_s
+
+
 def _measure_device_dispatch() -> float:
     try:
         import jax
@@ -322,14 +390,19 @@ def calibrate(cache: bool = True) -> HostCalibration:
     """Measure the host-tier cost constants on this machine and (optionally)
     persist them, replacing the baked-in defaults ``place`` would otherwise
     consume: one core's useful numpy FLOP/s, the per-item thread-queue hop,
-    the per-item shared-memory process-lane hop, and the host<->device
-    dispatch cost."""
+    the per-item shared-memory process-lane hop, the per-item loopback
+    network-lane hop, and the host<->device dispatch cost.
+
+    A read-only or unwritable cache location (containerized remote workers,
+    sealed CI sandboxes) degrades to in-memory constants with a one-line
+    warning — never an exception."""
     global _calibration
     c = HostCalibration(
         peak_flops=_measure_peak_flops(),
         queue_hop_s=_measure_queue_hop(),
         proc_hop_s=_measure_proc_hop(),
         device_dispatch_s=_measure_device_dispatch(),
+        net_hop_s=_measure_net_hop(),
         source="measured")
     _calibration = c
     if cache:
@@ -339,8 +412,11 @@ def calibrate(cache: bool = True) -> HostCalibration:
             with open(path, "w") as f:
                 json.dump({"version": _CALIB_VERSION,
                            "cpu_count": os.cpu_count(), **c.as_dict()}, f)
-        except OSError:
-            pass
+        except OSError as e:
+            warnings.warn(
+                f"perf_model: calibration cache {path!r} is not writable "
+                f"({e}); keeping measured constants in memory only",
+                RuntimeWarning, stacklevel=2)
     return c
 
 
@@ -357,6 +433,7 @@ def _load_cached_calibration() -> Optional[HostCalibration]:
             queue_hop_s=float(d["queue_hop_s"]),
             proc_hop_s=float(d["proc_hop_s"]),
             device_dispatch_s=float(d["device_dispatch_s"]),
+            net_hop_s=float(d["net_hop_s"]),
             source="cached")
     except (OSError, ValueError, KeyError, TypeError):
         # any unreadable/corrupt cache is a miss, never a crash
@@ -460,8 +537,11 @@ def _save_observed() -> None:
             json.dump({"version": _CALIB_VERSION,
                        "cpu_count": os.cpu_count(), **c.as_dict(),
                        "observed": _load_observed()}, f)
-    except OSError:
-        pass
+    except OSError as e:
+        warnings.warn(
+            f"perf_model: calibration cache {path!r} is not writable ({e}); "
+            "keeping observed costs in memory only",
+            RuntimeWarning, stacklevel=2)
 
 
 def _stat_records(x, out: list) -> None:
@@ -480,14 +560,20 @@ def observe(stats: dict, alpha: float = 0.25, write: bool = False) -> int:
     """Fold one ``runner.stats()`` snapshot (or any nested stats tree) into
     the calibration state; returns the number of facts absorbed.
 
-    - thread-tier farm records (``backend == "thread"`` with a ``fn_key``
-      and a per-item CPU-time EMA) update the observed per-callable service
-      time; a ``gil_ratio`` (CPU/wall) measured under >=2 concurrently
-      active workers also settles the callable's GIL signal — below 0.7 the
-      workers were serializing on the GIL (``releases_gil=False``), above
-      0.9 they truly ran in parallel (``True``);
+    - farm records carrying a ``fn_key`` and a per-item CPU-time EMA update
+      the observed per-callable service time — thread-tier records from the
+      parent's own measurement, process/remote-tier records from the
+      worker-side :class:`~repro.core.shm.WorkerStats` CPU clocks shipped
+      back over the result lanes (true service times, so the Supervisor's
+      process->thread policy no longer needs the hop-domination heuristic);
+      a thread record's ``gil_ratio`` (CPU/wall) measured under >=2
+      concurrently active workers also settles the callable's GIL signal —
+      below 0.7 the workers were serializing on the GIL
+      (``releases_gil=False``), above 0.9 they truly ran in parallel
+      (``True``);
     - process-tier records with a parent-side ``hop_ema_s`` refine the
-      calibrated shared-memory lane hop with an EMA.
+      calibrated shared-memory lane hop with an EMA; remote-tier records
+      refine the network-lane hop (``net_hop_s``) the same way.
 
     ``write=True`` persists the refreshed calibration + observed table into
     the on-disk cache (the supervisor writes once at ``stop()``; periodic
@@ -503,10 +589,11 @@ def observe(stats: dict, alpha: float = 0.25, write: bool = False) -> int:
             continue
         key = r.get("fn_key")
         cpu = float(r.get("svc_cpu_ema_s", 0.0) or 0.0)
-        if key and cpu > 0.0 and r.get("backend") == "thread":
+        backend = r.get("backend")
+        if key and cpu > 0.0 and backend in ("thread", "process", "remote"):
             prev = table.get(key)
             rg = prev.get("releases_gil") if prev else None
-            ratio = r.get("gil_ratio")
+            ratio = r.get("gil_ratio")     # thread records only
             if ratio is not None and int(r.get("active", 1) or 1) >= 2:
                 if ratio < 0.7:
                     rg = False
@@ -518,11 +605,17 @@ def observe(stats: dict, alpha: float = 0.25, write: bool = False) -> int:
                           "items": max(items, prev["items"] if prev else 0)}
             absorbed += 1
         hop = float(r.get("hop_ema_s", 0.0) or 0.0)
-        if hop > 0.0 and r.get("backend") == "process":
+        if hop > 0.0 and backend in ("process", "remote"):
             c = get_calibration(measure=False)
-            _calibration = dataclasses.replace(
-                c, proc_hop_s=(1.0 - alpha) * c.proc_hop_s + alpha * hop,
-                source="observed")
+            if backend == "process":
+                c = dataclasses.replace(
+                    c, proc_hop_s=(1.0 - alpha) * c.proc_hop_s + alpha * hop,
+                    source="observed")
+            else:
+                c = dataclasses.replace(
+                    c, net_hop_s=(1.0 - alpha) * c.net_hop_s + alpha * hop,
+                    source="observed")
+            _calibration = c
             absorbed += 1
     if write and absorbed:
         _save_observed()

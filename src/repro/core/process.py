@@ -54,8 +54,12 @@ from typing import Any, Callable, Dict, List, Optional
 from .node import EOS, FFNode, GO_ON
 from .queues import QueueClosed
 from .shm import (ShmError, ShmMPMCGrid, ShmMPSCQueue, ShmSPMCQueue,
-                  ShmSPSCQueue)
+                  ShmSPSCQueue, WorkerStats)
 from .skeletons import AutoscaleLB
+
+# ship a WorkerStats CPU-time record back every this many processed items
+# (plus one final record before EOS, so short streams still report)
+_STATS_EVERY = 32
 
 # fork keeps worker start cheap and lets closures ride along; spawn is the
 # fallback where fork does not exist (the callables must then pickle by
@@ -106,11 +110,17 @@ def _worker_main(idx: int, fn: Callable, in_lane, out_lane) -> None:
 
     Items ride the lanes bare — each lane is FIFO, so the parent matches
     results to sequence numbers by arrival order and nothing extra crosses
-    the wire (bare ndarrays keep the raw-slab fast path).  EOS (or a closed
+    the wire (bare ndarrays keep the raw-slab fast path).  Every
+    ``_STATS_EVERY`` items (and once more before EOS) the worker also ships
+    a :class:`~repro.core.shm.WorkerStats` record — true per-item CPU
+    seconds from ``time.thread_time`` — which the parent collector folds
+    into its stats *without* consuming a sequence slot.  EOS (or a closed
     input lane) terminates; an exception in ``fn`` ships an error record
     followed by EOS so the parent collector both surfaces the error and
     stops waiting on this lane."""
     _pin(idx)
+    done = 0
+    cpu_ema = 0.0
     try:
         while True:
             try:
@@ -120,14 +130,30 @@ def _worker_main(idx: int, fn: Callable, in_lane, out_lane) -> None:
             if got is EOS:
                 break
             try:
+                c0 = time.thread_time()
                 out = fn(got)
+                cpu = time.thread_time() - c0
             except BaseException as e:  # noqa: BLE001 - shipped to the parent
                 out_lane.push_err(ShmError(idx, repr(e),
                                            traceback.format_exc()))
                 return
             out_lane.push(out)
+            done += 1
+            cpu_ema = cpu if cpu_ema == 0.0 else 0.9 * cpu_ema + 0.1 * cpu
+            if done % _STATS_EVERY == 0:
+                try:        # best-effort: a full lane must not stall results
+                    out_lane.push(WorkerStats(idx, done, cpu_ema),
+                                  timeout=1.0)
+                except (TimeoutError, QueueClosed):
+                    pass
     finally:
         try:
+            if done:
+                try:
+                    out_lane.push(WorkerStats(idx, done, cpu_ema),
+                                  timeout=1.0)
+                except (TimeoutError, QueueClosed):
+                    pass
             out_lane.push_eos()
         except BaseException:   # noqa: BLE001 - parent may be gone
             pass
@@ -192,6 +218,7 @@ class ProcessFarmNode(FFNode):
         # lane i is FIFO, so its results map to these seqs in arrival order
         # (deque append/popleft from opposite ends is GIL-atomic)
         self._lane_seqs = [collections.deque() for _ in range(self._n)]
+        self._worker_cpu: Dict[int, tuple] = {}   # idx -> (items, cpu_ema_s)
         self._eos_seen = [False] * self._n
         self._collector: Optional[threading.Thread] = None
         self._destroyed = False
@@ -304,6 +331,12 @@ class ProcessFarmNode(FFNode):
                     f"{got.exc}\n{got.tb}")
                 self._fail()
                 return
+            if isinstance(got, WorkerStats):
+                # a stats record, not a stream item: it consumed no sequence
+                # slot, so fold it in *before* touching the lane's seq map
+                with self._stats_lock:
+                    self._worker_cpu[got.worker] = (got.items, got.cpu_ema_s)
+                continue
             hold[self._lane_seqs[lane].popleft()] = got
             while nxt in hold:
                 out = hold.pop(nxt)
@@ -406,6 +439,8 @@ class ProcessFarmNode(FFNode):
         depths = [0] * self._n if self._destroyed \
             else [len(l) for l in self._spmc.lanes]
         with self._stats_lock:
+            cpu_recs = list(self._worker_cpu.values())
+            total = sum(i for i, _ in cpu_recs)
             s = {
                 "node": self._label,
                 "backend": "process",
@@ -415,6 +450,11 @@ class ProcessFarmNode(FFNode):
                 "delivered": self._delivered,
                 "routed_per_worker": list(self._routed),
                 "svc_time_ema_s": self.svc_time_ema,
+                # items-weighted worker-side CPU seconds per item (true
+                # service time, measured in the children); 0.0 until the
+                # first WorkerStats record lands
+                "svc_cpu_ema_s": (sum(i * c for i, c in cpu_recs) / total
+                                  if total else 0.0),
                 "hop_ema_s": self._hop_ema,
                 "delivery_gap_ema_s": self._gap_ema,
                 "lane_depths": depths,

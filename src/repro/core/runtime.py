@@ -470,7 +470,24 @@ class Supervisor:
                     h.resize(max_w)
         elif tier == "host_process":
             hop = float(s.get("hop_ema_s", 0.0) or 0.0) or calib.proc_hop_s
-            # per-WORKER service time, not per-item delivery gap: a wide,
+            cpu = float(s.get("svc_cpu_ema_s", 0.0) or 0.0)
+            if cpu > 0.0:
+                # true-service-time comparison: the workers now ship their
+                # own CPU clocks back over the result lanes (WorkerStats),
+                # so the policy compares what a thread farm would actually
+                # cost — serial cpu per item, floored by the thread-queue
+                # hop — against observed delivery, past the same hysteresis
+                # margin the forward policy uses
+                thread_est = max(cpu, calib.queue_hop_s)
+                if thread_est < self.hysteresis * t_obs:
+                    self._migrate(i, h, "host",
+                                  f"worker cpu {cpu*1e6:.0f}us/item: thread "
+                                  f"est {thread_est*1e6:.0f}us beats "
+                                  f"observed {t_obs*1e6:.0f}us/item")
+                return
+            # no worker CPU record yet (short stream, stats in flight):
+            # fall back to the hop-domination heuristic.  Per-WORKER
+            # service time, not per-item delivery gap: a wide,
             # well-parallelized farm delivers every t_task/width — frequent
             # deliveries alone must not read as "hop-dominated" (that would
             # ping-pong against the forward policy above, which only fires

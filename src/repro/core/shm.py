@@ -79,6 +79,26 @@ class ShmError:
         return f"ShmError(worker={self.worker}, exc={self.exc!r})"
 
 
+class WorkerStats:
+    """A worker-side CPU-time record shipped over a result lane (seq-less
+    control payload, not a stream item): ``items`` processed so far and an
+    EMA of per-item *CPU* seconds (``time.thread_time``).  Farms fold these
+    into ``node_stats()["svc_cpu_ema_s"]`` so the runtime Supervisor's
+    process→thread policy compares true service times instead of inferring
+    them from hop domination."""
+
+    __slots__ = ("worker", "items", "cpu_ema_s")
+
+    def __init__(self, worker: int, items: int, cpu_ema_s: float):
+        self.worker = worker
+        self.items = items
+        self.cpu_ema_s = cpu_ema_s
+
+    def __repr__(self) -> str:
+        return (f"WorkerStats(worker={self.worker}, items={self.items}, "
+                f"cpu_ema_s={self.cpu_ema_s:.3g})")
+
+
 def _unregister_tracker(name: str) -> None:
     # attaching registers the segment with this process's resource_tracker,
     # which would unlink it when the attacher exits; only the creator owns

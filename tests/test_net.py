@@ -1,0 +1,523 @@
+"""The distributed tier (PR 6): frame codec robustness, NetLane credit /
+heartbeat discipline, loopback-cluster remote farms, cluster autoscaling,
+and the net-hop calibration + observe() feedback."""
+
+import contextlib
+import os
+import pathlib
+import signal
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (EOS, FFNode, GraphError, HostRunner, NetLane,
+                        RemoteFarmNode, RemoteRunner, WorkerCrashed, farm,
+                        perf_model as pm, pipeline, spawn_loopback_pool)
+from repro.core.net import (FrameError, MAX_FRAME_BYTES, TAG_ARR, TAG_PKL,
+                            _SLOT_FMT, _SLOT_HDR, decode_payload, encode_frame,
+                            encode_item, parse_addr, read_frame)
+from repro.core.runtime import Supervisor
+from repro.core.shm import WorkerStats
+
+pytestmark = pytest.mark.net
+
+
+# -- module-level workers (must pickle across the wire) ------------------------
+class _Gen(FFNode):
+    def __init__(self, n):
+        super().__init__()
+        self.i, self.n = 0, n
+
+    def svc(self, _):
+        self.i += 1
+        return np.float32(self.i) if self.i <= self.n else None
+
+
+class _ArrGen(FFNode):
+    def __init__(self, n):
+        super().__init__()
+        self.i, self.n = 0, n
+
+    def svc(self, _):
+        if self.i >= self.n:
+            return None
+        self.i += 1
+        return np.arange(8, dtype=np.float32) + np.float32(self.i)
+
+
+class _GenUnpicklable(FFNode):
+    def __init__(self):
+        super().__init__()
+        self.done = False
+
+    def svc(self, _):
+        if self.done:
+            return None
+        self.done = True
+        return (i for i in range(3))    # generators cannot pickle
+
+
+def _double(x):
+    return x * 2.0
+
+
+def _sleepy(x):
+    time.sleep(0.01)
+    return x + 1.0
+
+
+def _kill_on_seven(x):
+    if int(x) == 7:
+        os.kill(os.getpid(), signal.SIGKILL)
+    return float(x)
+
+
+@contextlib.contextmanager
+def _pool(n, **kw):
+    addrs, procs = spawn_loopback_pool(n, **kw)
+    try:
+        yield addrs, procs
+    finally:
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            p.join(timeout=10.0)
+
+
+def _roundtrip(item):
+    frame = encode_item(item)
+    length, tag, seq = struct.unpack(_SLOT_FMT, frame[:_SLOT_HDR])
+    assert length == len(frame) - _SLOT_HDR
+    return tag, decode_payload(tag, frame[_SLOT_HDR:])
+
+
+# -- frame codec ---------------------------------------------------------------
+def test_parse_addr_forms():
+    assert parse_addr("127.0.0.1:7001") == ("127.0.0.1", 7001)
+    assert parse_addr(("10.0.0.2", 80)) == ("10.0.0.2", 80)
+    with pytest.raises(ValueError):
+        parse_addr("no-port-here")
+
+
+def test_contiguous_array_rides_raw_fast_path_byte_identical():
+    a = np.random.default_rng(0).standard_normal((5, 7)).astype(np.float32)
+    tag, b = _roundtrip(a)
+    assert tag == TAG_ARR
+    assert b.dtype == a.dtype and b.shape == a.shape
+    assert b.tobytes() == a.tobytes()
+
+
+def test_0d_forder_and_noncontiguous_arrays_roundtrip():
+    z = np.array(3.5, dtype=np.float64)             # 0-d
+    tag, b = _roundtrip(z)
+    assert tag == TAG_ARR and b.shape == () and float(b) == 3.5
+
+    f = np.asfortranarray(np.arange(12, dtype=np.int32).reshape(3, 4))
+    tag, b = _roundtrip(f)                          # F-order: made contiguous
+    assert tag == TAG_ARR
+    np.testing.assert_array_equal(b, f)
+
+    s = np.arange(20, dtype=np.float32)[::3]        # strided view
+    tag, b = _roundtrip(s)
+    assert tag == TAG_ARR
+    np.testing.assert_array_equal(b, s)
+
+
+def test_structured_object_and_pytree_fall_back_to_pickle():
+    rec = np.zeros(3, dtype=[("a", "f4"), ("b", "i8")])
+    tag, b = _roundtrip(rec)
+    assert tag == TAG_PKL
+    np.testing.assert_array_equal(b, rec)
+
+    obj = np.array([{"k": 1}, None, (2, 3)], dtype=object)
+    tag, b = _roundtrip(obj)
+    assert tag == TAG_PKL and b[0] == {"k": 1}
+
+    tree = {"x": np.float32(2.0), "y": [1, "two"]}
+    tag, b = _roundtrip(tree)
+    assert tag == TAG_PKL and b == tree
+
+
+def test_oversized_payload_rejected_on_both_sides():
+    big = np.zeros(1024, dtype=np.uint8)
+    with pytest.raises(FrameError):
+        encode_frame(TAG_ARR, big, max_frame=64)    # encode side
+    a, b = socket.socketpair()
+    try:
+        # a length word past the lane limit is rejected before allocation
+        a.sendall(struct.pack(_SLOT_FMT, MAX_FRAME_BYTES + 1, TAG_PKL, 0))
+        with pytest.raises(FrameError, match="oversized"):
+            read_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_partial_reads_reassemble_truncation_raises_clean_eof_is_none():
+    frame = encode_item(np.arange(64, dtype=np.float32), seq=9)
+
+    a, b = socket.socketpair()
+    try:
+        def drip():
+            for i in range(0, len(frame), 7):       # 7-byte chunks
+                a.sendall(frame[i:i + 7])
+                time.sleep(0.001)
+        t = threading.Thread(target=drip, daemon=True)
+        t.start()
+        tag, payload, seq = read_frame(b)
+        t.join()
+        assert (tag, seq) == (TAG_ARR, 9)
+        np.testing.assert_array_equal(decode_payload(tag, payload),
+                                      np.arange(64, dtype=np.float32))
+    finally:
+        a.close()
+        b.close()
+
+    a, b = socket.socketpair()
+    try:
+        a.sendall(frame[:_SLOT_HDR + 10])           # truncated mid-payload
+        a.close()
+        with pytest.raises(FrameError, match="truncated"):
+            read_frame(b)
+    finally:
+        b.close()
+
+    a, b = socket.socketpair()
+    try:
+        a.close()                                   # clean EOF at a boundary
+        assert read_frame(b) is None
+    finally:
+        b.close()
+
+
+def test_corrupt_ndarray_meta_raises_frame_error():
+    frame = encode_item(np.arange(8, dtype=np.float32))
+    payload = bytearray(frame[_SLOT_HDR:])
+    payload[0] = 7                                  # lie about ndim
+    with pytest.raises(FrameError):
+        decode_payload(TAG_ARR, bytes(payload))
+
+
+# -- NetLane: credit window + liveness ----------------------------------------
+def _lane_pair(credit=4, **kw):
+    a, b = socket.socketpair()
+    kw.setdefault("hb_interval", 5.0)               # quiet heartbeats
+    return (NetLane(a, credit=credit, label="A", **kw),
+            NetLane(b, credit=credit, label="B", **kw))
+
+
+def test_credit_window_backpressures_and_pop_regrants():
+    A, B = _lane_pair(credit=4)
+    try:
+        for i in range(4):
+            assert A.try_push(np.float32(i), seq=i)
+        assert not A.try_push(np.float32(99), seq=99)   # window exhausted
+        assert len(A) >= 4
+
+        item, seq = B.pop_seq(timeout=10.0)             # pop grants a credit
+        assert (float(item), seq) == (0.0, 0)
+        A.push(np.float32(4), timeout=10.0, seq=4)      # ... which re-opens
+        for want in (1, 2, 3, 4):
+            item, seq = B.pop_seq(timeout=10.0)
+            assert seq == want
+    finally:
+        A.shutdown()
+        B.shutdown()
+
+
+def test_stream_longer_than_window_arrives_in_exact_order():
+    A, B = _lane_pair(credit=4)
+    n = 64
+    try:
+        def feed():
+            for i in range(n):
+                A.push(np.float32(i), timeout=30.0, seq=i)
+            A.push_eos()
+        t = threading.Thread(target=feed, daemon=True)
+        t.start()
+        seqs, vals = [], []
+        while True:
+            item, seq = B.pop_seq(timeout=30.0)
+            if item is EOS:
+                break
+            seqs.append(seq)
+            vals.append(float(item))
+        t.join()
+        assert seqs == list(range(n))
+        assert vals == [float(i) for i in range(n)]
+        assert A.max_depth <= 4                         # window held
+    finally:
+        A.shutdown()
+        B.shutdown()
+
+
+def test_heartbeat_timeout_marks_silent_peer_dead():
+    a, b = socket.socketpair()
+    lane = NetLane(a, hb_interval=0.05, hb_timeout=0.25, label="hb")
+    try:
+        deadline = time.monotonic() + 5.0
+        while lane.peer_dead is None and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert lane.peer_dead is not None
+        assert "heartbeat" in lane.peer_dead
+        with pytest.raises(WorkerCrashed):
+            lane.push(np.float32(1.0), timeout=1.0)
+    finally:
+        lane.shutdown()
+        b.close()
+
+
+def test_eof_mid_stream_marks_dead_and_pop_raises():
+    a, b = socket.socketpair()
+    lane = NetLane(a, hb_interval=5.0, label="eof")
+    try:
+        b.close()                                   # peer vanishes, no EOS
+        with pytest.raises(WorkerCrashed):
+            lane.pop_seq(timeout=5.0)
+        assert "closed" in lane.peer_dead
+    finally:
+        lane.shutdown()
+
+
+# -- loopback cluster: remote farms -------------------------------------------
+def test_remote_farm_parity_exact_order_past_credit_window():
+    n = 64                                          # stream >> credit window
+    expected = [(np.arange(8, dtype=np.float32) + np.float32(i)) * 2.0
+                for i in range(1, n + 1)]
+    with _pool(2) as (addrs, _):
+        r = pipeline(_ArrGen(n), farm(_double, n=2)).compile(
+            mode="remote", remote_workers=addrs, net_credit=8)
+        assert isinstance(r, RemoteRunner)
+        farm_p = [p for d, p in r.placements if "farm" in d][0]
+        assert farm_p.target == "host_remote" and farm_p.width == 2
+        out = r.run(timeout=120.0)
+    # byte-identical AND exactly input-ordered, past the credit window
+    assert len(out) == n
+    for got, want in zip(out, expected):
+        assert got.dtype == want.dtype and got.tobytes() == want.tobytes()
+
+    host = pipeline(_ArrGen(n), farm(_double, n=2)).compile(mode="host").run()
+    assert sorted(a.tobytes() for a in host) \
+        == sorted(a.tobytes() for a in expected)
+
+
+def test_remote_farm_with_absorbed_emitter_collector():
+    n = 10
+    with _pool(2) as (addrs, _):
+        r = pipeline(_Gen(n), lambda x: x + 0.5, farm(_double, n=2),
+                     lambda y: y - 1.0).compile(
+            mode="remote", remote_workers=addrs)
+        assert isinstance(r, RemoteRunner)
+        out = [float(v) for v in r.run(timeout=120.0)]
+    assert out == pytest.approx(
+        [(i + 0.5) * 2.0 - 1.0 for i in range(1, n + 1)])
+
+
+def test_unencodable_item_surfaces_item_error_not_cluster_death():
+    # an item the wire cannot carry is the item's fault: the farm must
+    # surface the encode error (like the shm tier's oversized-slot raise),
+    # not misreport "all workers are gone" while every worker is alive
+    with _pool(2) as (addrs, procs):
+        r = pipeline(_GenUnpicklable(), farm(_double, n=2)).compile(
+            mode="remote", remote_workers=addrs)
+        with pytest.raises(Exception) as ei:
+            r.run(timeout=120.0)
+        assert not isinstance(ei.value, WorkerCrashed)
+        assert "gone" not in str(ei.value)
+        assert all(p.is_alive() for p in procs)
+
+
+def test_killed_remote_worker_surfaces_crash_not_wedge():
+    with _pool(2) as (addrs, _):
+        r = pipeline(_Gen(40), farm(_kill_on_seven, n=2)).compile(
+            mode="remote", remote_workers=addrs)
+        t0 = time.monotonic()
+        with pytest.raises(WorkerCrashed):
+            r.run(timeout=120.0)
+        assert time.monotonic() - t0 < 60.0
+        assert isinstance(r.error(), WorkerCrashed)
+
+
+def test_autoscale_remote_farm_grows_active_set_from_lane_depth():
+    n = 80
+    with _pool(2) as (addrs, _):
+        r = pipeline(_Gen(n), farm(_sleepy, n=2, autoscale=True)).compile(
+            mode="remote", remote_workers=addrs)
+        node = [s for s in r._skel._stages
+                if isinstance(s, RemoteFarmNode)][0]
+        out = [float(v) for v in r.run(timeout=120.0)]
+        assert out == pytest.approx([i + 1.0 for i in range(1, n + 1)])
+        st = node.node_stats()
+        assert st["autoscale"]["grown"] >= 1        # 1-wide start, grew
+        assert sum(st["routed_per_worker"]) == n
+        assert st["svc_cpu_ema_s"] >= 0.0           # WorkerStats folded
+
+
+def test_supervisor_drives_cluster_autoscaling_from_lane_depth():
+    """The PR-5 Supervisor over a remote farm: trickle retires a remote
+    worker, a burst reactivates it — cluster autoscaling through the same
+    width policy the on-box tiers use, order preserved throughout."""
+    with _pool(3) as (addrs, _):
+        r = farm(_sleepy, n=3).compile(mode="remote", remote_workers=addrs)
+        handles = r.stage_handles()
+        assert [h.tier for h in handles] == ["host_remote"]
+        assert handles[0].can_migrate("host") is False
+        r.run_then_freeze()
+        sup = Supervisor(r, interval=0.01, migrate=False).start()
+        got = []
+        done = threading.Event()
+
+        def collect():
+            while True:
+                ok, item = r.load_result(timeout=120.0)
+                if not ok:
+                    break
+                got.append(item)
+            done.set()
+
+        threading.Thread(target=collect, daemon=True).start()
+        # trickle: lanes idle -> the supervisor retires remote workers
+        for i in range(12):
+            r.offload(float(i))
+            time.sleep(0.02)
+        deadline = time.monotonic() + 10.0
+        while not any(e.kind == "shrink" for e in sup.events) \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        # burst: deep lanes -> it grows the active remote set back
+        for i in range(12, 120):
+            r.offload(float(i))
+        r.offload(EOS)
+        assert done.wait(120.0)
+        assert r.wait(30.0) == 0
+        sup.stop()
+        kinds = {e.kind for e in sup.events}
+        assert "shrink" in kinds and "grow" in kinds
+        assert got == [i + 1.0 for i in range(120)]  # seq-ordered throughout
+
+
+def test_worker_cli_serves_a_lane_end_to_end():
+    """python -m repro.launch.worker --listen 127.0.0.1:0 comes up, prints
+    its bound port, serves the FN handshake + a short stream, ships its
+    WorkerStats CPU record, and answers EOS."""
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.worker",
+         "--listen", "127.0.0.1:0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+    try:
+        line = proc.stdout.readline().strip()
+        assert line.startswith("listening "), line
+        host, port = parse_addr(line.split()[1])
+        from repro.launch.worker import demo_fn
+        lane = NetLane.connect(host, port, timeout=30.0)
+        try:
+            lane.push_fn(demo_fn)
+            for i in range(5):
+                lane.push(float(i), timeout=10.0, seq=i)
+            lane.push_eos()
+            got, stats = {}, None
+            while True:
+                item, seq = lane.pop_seq(timeout=60.0)
+                if item is EOS:
+                    break
+                if isinstance(item, WorkerStats):
+                    stats = item
+                    continue
+                got[seq] = item
+            assert got == {i: float(i) * float(i) for i in range(5)}
+            assert stats is not None and stats.items == 5
+            assert stats.cpu_ema_s >= 0.0
+        finally:
+            lane.shutdown()
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10.0)
+
+
+# -- placement: the host_remote target ----------------------------------------
+def test_mode_remote_without_pool_rejected():
+    with pytest.raises(GraphError, match="remote_workers"):
+        pipeline(_Gen(3), farm(_double, n=2)).compile(mode="remote")
+
+
+def test_host_remote_override_without_pool_rejected():
+    with pytest.raises(GraphError):
+        pipeline(_Gen(3), farm(_double, n=2)).compile(
+            placements={1: "host_remote"})
+
+
+def test_forced_remote_with_unpicklable_worker_falls_back_to_host():
+    # a lambda cannot cross hosts even though fork-based processes take it
+    r = pipeline(_Gen(3), farm(lambda x: x + 1.0, n=2)).compile(
+        mode="remote", remote_workers=["127.0.0.1:1", "127.0.0.1:2"])
+    assert isinstance(r, HostRunner) and not isinstance(r, RemoteRunner)
+    p = [p for d, p in r.placements if "farm" in d][0]
+    assert p.target == "host" and "pickle" in p.reason
+
+
+# -- calibration + observe feedback (satellites) -------------------------------
+def _fast_measures(monkeypatch, skip=()):
+    for name in ("_measure_peak_flops", "_measure_queue_hop",
+                 "_measure_proc_hop", "_measure_device_dispatch",
+                 "_measure_net_hop"):
+        if name not in skip:
+            monkeypatch.setattr(
+                pm, name,
+                lambda *a, _n=name, **k:
+                    1e9 if _n == "_measure_peak_flops" else 1e-4)
+
+
+def test_calibrate_measures_net_hop_and_caches(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FF_CALIB_CACHE", str(tmp_path / "calib.json"))
+    _fast_measures(monkeypatch, skip=("_measure_net_hop",))
+    pm.reset_calibration()
+    c = pm.calibrate()
+    assert c.source == "measured"
+    assert 0 < c.net_hop_s < 0.1                    # loopback-measured
+    pm.reset_calibration()
+    c2 = pm.get_calibration(measure=False)
+    assert c2.source == "cached"
+    assert c2.net_hop_s == pytest.approx(c.net_hop_s)
+    pm.reset_calibration()
+
+
+def test_unwritable_cache_dir_degrades_with_warning(monkeypatch):
+    """Satellite: a read-only cache location (sealed CI sandbox, remote
+    container) keeps the measured constants in memory instead of raising."""
+    monkeypatch.setenv("REPRO_FF_CALIB_CACHE", "/proc/ff-denied/calib.json")
+    _fast_measures(monkeypatch)
+    pm.reset_calibration()
+    with pytest.warns(RuntimeWarning, match="not writable"):
+        c = pm.calibrate()
+    assert c.source == "measured"                   # still usable in-process
+    pm.reset_calibration()
+
+
+def test_observe_absorbs_remote_hop_and_true_service_time(tmp_path,
+                                                          monkeypatch):
+    monkeypatch.setenv("REPRO_FF_CALIB_CACHE", str(tmp_path / "calib.json"))
+    pm.reset_calibration()
+    pm.reset_observed()
+    c0 = pm.get_calibration(measure=False)
+    absorbed = pm.observe({"stages": [{
+        "node": "remote_farm[2]", "backend": "remote", "tier": "host_remote",
+        "fn_key": "tests.fake_remote_fn", "items": 16,
+        "svc_cpu_ema_s": 2e-3, "hop_ema_s": 4e-3}]})
+    assert absorbed == 2                            # hop fact + cost fact
+    c1 = pm.get_calibration(measure=False)
+    assert c1.source == "observed"
+    assert c1.net_hop_s == pytest.approx(0.75 * c0.net_hop_s + 0.25 * 4e-3)
+    assert c1.proc_hop_s == c0.proc_hop_s           # untouched
+    rec = pm.lookup_observed("tests.fake_remote_fn")
+    assert rec is not None and rec["t_task"] == pytest.approx(2e-3)
+    pm.reset_calibration()
+    pm.reset_observed()

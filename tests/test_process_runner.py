@@ -301,6 +301,22 @@ def test_process_runner_stats_include_worker_routing():
     assert node["max_lane_depth"] >= 1
 
 
+@pytest.mark.shm
+def test_process_workers_ship_cpu_time_stats_over_result_lanes():
+    """Satellite of the distributed tier: process workers clock their own
+    svc CPU time (time.thread_time) and ship WorkerStats records back over
+    the result lanes, so node_stats carries a true (GIL-free) per-item
+    service time the Supervisor's process->thread policy can compare."""
+    r = pipeline(Gen(40), farm(_gil_bound, n=2)).compile(mode="process")
+    r.run(timeout=120.0)
+    node = [st for st in r.stats()["graph"]["stages"]
+            if st.get("backend") == "process"][0]
+    # _gil_bound burns ~ms of real CPU per item: the folded worker-side
+    # EMA must be positive and plausibly bounded by the wall clock
+    assert node["svc_cpu_ema_s"] > 0.0
+    assert node["svc_cpu_ema_s"] < 1.0
+
+
 def test_device_runner_stats(plan):
     f = lambda x: x * 2.0
     f.ff_flops = 1e9
