@@ -6,12 +6,21 @@ Layer 1-2 (``core.queues``, ``core.shm``, ``core.net``): lock-free SPSC
 ring buffers, composed into SPMC / MPSC / MPMC networks — the channels every
 host skeleton runs over.  ``core.queues`` is the thread-tier instance;
 ``core.shm`` lays the same fixed-slot ring out in
-``multiprocessing.shared_memory`` (raw-numpy slab fast path, pickled-bytes
-fallback) so the ring crosses OS processes — FastFlow's actual multicore
-claim; ``core.net`` speaks the same slot protocol over TCP (length-prefixed
-frames, u64 seqs, EOS/ERR control, plus credit-window back-pressure and
-heartbeats) so the lane crosses the *host* boundary — the distributed
-tier.
+``multiprocessing.shared_memory`` so the ring crosses OS processes —
+FastFlow's actual multicore claim — in three lane tiers: the bounded SPSC
+ring (raw-numpy slab fast path, pickled-bytes fallback, back-pressure when
+full), the *uSPSC* unbounded tier of the 2009 FastFlow TR
+(``ShmUSPSCQueue``: a linked chain of ring segments grown on overflow and
+retired on drain, so the producer never blocks), and the ``ShmArena`` slab
+for ndarrays larger than a ring slot (shipped as arena offsets, never
+pickled).  Every lane moves items *vectored* — ``push_many``/``pop_many``
+pay one atomic index write and one spin per batch, with small non-array
+items coalescing into single batch slots — and ``compile(transport=...)``
+(a ``TransportConfig``) tunes ring depths, slot/arena sizes,
+bounded-vs-uSPSC, and the batch flush policy per compile.  ``core.net``
+speaks the same slot protocol over TCP (length-prefixed frames, u64 seqs,
+EOS/ERR control, plus credit-window back-pressure and heartbeats) so the
+lane crosses the *host* boundary — the distributed tier.
 
 Layer 3 (``core.node``, ``core.skeletons``): the paper-faithful host
 runtime — ``ff_node`` (``svc``/``svc_init``/``svc_end``), ``Pipeline``,
@@ -47,7 +56,9 @@ explicit stages —
    parallelism over the network hop beats both on-box tiers, or forced
    with ``mode="remote"``), or *device* — consuming the constants
    ``perf_model.calibrate()`` measures at startup (host peak FLOP/s,
-   thread-queue hop, process-lane hop, loopback network hop, device
+   thread-queue hop, process-lane hop per item AND amortized over a
+   vectored batch — the batched hop is what the process tier is actually
+   charged — slab-arena bandwidth, loopback network hop, device
    dispatch; cached on disk,
    ``REPRO_FF_CACHE``/``XDG_CACHE_HOME``-relocatable for hermetic CI, and
    degrading to in-memory constants with a warning when the cache dir is
@@ -111,7 +122,9 @@ from .queues import MPMCQueue, MPSCQueue, QueueClosed, SPMCQueue, SPSCQueue
 from .skeletons import (AutoscaleLB, BroadcastLB, Farm, FF_EOS, FFMap,
                         LoadBalancer, OnDemandLB, Pipeline, RoundRobinLB,
                         Skeleton, ThreadFarmNode)
-from .shm import ShmMPMCGrid, ShmMPSCQueue, ShmSPMCQueue, ShmSPSCQueue
+from .shm import (BatchedLaneWriter, ShmArena, ShmMPMCGrid, ShmMPSCQueue,
+                  ShmSPMCQueue, ShmSPSCQueue, ShmUSPSCQueue, TransportConfig,
+                  as_transport)
 from .graph import (A2ASkeleton, Deliver, FFGraph, GraphError, Runner,
                     StageHandle, all_to_all, farm, ffmap, pipeline, seq)
 from .graph import HostRunner, DeviceRunner
@@ -130,6 +143,8 @@ __all__ = [
     "EOS", "GO_ON", "FF_EOS", "FFNode", "FnNode",
     "SPSCQueue", "SPMCQueue", "MPSCQueue", "MPMCQueue", "QueueClosed",
     "ShmSPSCQueue", "ShmSPMCQueue", "ShmMPSCQueue", "ShmMPMCGrid",
+    "ShmUSPSCQueue", "ShmArena", "TransportConfig", "BatchedLaneWriter",
+    "as_transport",
     "Pipeline", "Farm", "FFMap", "Skeleton", "ThreadFarmNode",
     "LoadBalancer", "RoundRobinLB", "OnDemandLB", "BroadcastLB",
     "AutoscaleLB",

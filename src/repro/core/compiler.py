@@ -470,10 +470,10 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
                                                t_collect=t_coll,
                                                overhead=calib.queue_hop_s))
             proc_width = (len(s.workers) if not s.n_auto else
-                          pm.choose_farm_width(c.t_task, n_cpu,
-                                               t_emit=t_emit,
-                                               t_collect=t_coll,
-                                               overhead=calib.proc_hop_s))
+                          pm.choose_farm_width(
+                              c.t_task, n_cpu, t_emit=t_emit,
+                              t_collect=t_coll,
+                              overhead=calib.proc_hop_effective_s()))
         elif isinstance(s, FarmG):
             host_width = len(s.workers) if not s.n_auto else n_cpu
             proc_width = host_width
@@ -559,9 +559,12 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
                           for x in s.left) / nL
                 t_r = sum(getattr(x.cost, "t_task", DEFAULT_T_TASK_S)
                           for x in s.right) / nR
-                t = pm.a2a_service_time(t_l, t_r, nL, nR, calib.proc_hop_s)
+                # the farm/a2a lanes are batched (push_many/pop_many), so
+                # the amortized hop is the honest per-item price here
+                t = pm.a2a_service_time(t_l, t_r, nL, nR,
+                                        calib.proc_hop_effective_s())
             else:
-                t = c.process_time(proc_width, calib.proc_hop_s)
+                t = c.process_time(proc_width, calib.proc_hop_effective_s())
             if t < 0.8 * host_t:
                 proc_t = t
         # the remote tier competes on the same terms: GIL-bound work wide
@@ -599,7 +602,7 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
                 ("autoscale on the process tier: " if autoscale else "")
                 + f"GIL-bound: {proc_width} processes {proc_t*1e6:.1f}us < "
                 f"threads {host_t*1e6:.1f}us "
-                f"(calibrated hop {calib.proc_hop_s*1e6:.1f}us, "
+                f"(calibrated hop {calib.proc_hop_effective_s()*1e6:.1f}us, "
                 f"{calib.source})")
         else:
             host_reason = "autoscale requested (host runtime)" \
@@ -813,10 +816,13 @@ def _lower_remote_stage(s: Any, p: Placement,
 
 
 def _lower_process_stage(s: Any, p: Placement, capacity: int,
-                         slot_bytes: int) -> SeqG:
+                         transport: Any) -> SeqG:
     """Replace a process-placed farm or all_to_all with its boundary node:
     to the rest of the (thread-tier) network it is one ordinary host
-    stage."""
+    stage.  ``transport`` (a :class:`~repro.core.shm.TransportConfig`) caps
+    the ring depths (``ring_slots`` per farm lane, ``grid_slots`` per a2a
+    grid segment — the grid is nL x nR eagerly allocated, so shallower) and
+    sizes the slots and the slab arena."""
     reason = _process_ineligible_reason(s)
     if reason is not None:
         raise GraphError(f"cannot process-lower {s.describe()}: {reason}")
@@ -825,9 +831,7 @@ def _lower_process_stage(s: Any, p: Placement, capacity: int,
         rfns = [_pure_of(x) for x in s.right]
         node = ProcessA2ANode(
             lfns, rfns, router=s.router,
-            # the grid is nL x nR eagerly allocated segments: keep the
-            # rings shallower than a farm's lanes
-            capacity=max(2, min(capacity, 32)), slot_bytes=slot_bytes,
+            capacity=capacity, transport=transport,
             label=f"process_a2a[{len(lfns)}x{len(rfns)}]")
         return SeqG(node)
     width = max(1, p.width or len(s.workers))
@@ -837,8 +841,7 @@ def _lower_process_stage(s: Any, p: Placement, capacity: int,
     post = _pure_of(s.collector) if s.collector is not None else None
     node = ProcessFarmNode(
         fns, pre=pre, post=post,
-        # shm slots are eagerly allocated segments: keep rings shallow
-        capacity=max(2, min(capacity, 64)), slot_bytes=slot_bytes,
+        capacity=capacity, transport=transport,
         autoscale=s.autoscale,
         label=f"process_farm[{len(fns)}]"
         + ("@autoscale" if s.autoscale else ""))
@@ -846,7 +849,8 @@ def _lower_process_stage(s: Any, p: Placement, capacity: int,
 
 
 def _maybe_adaptive_node(s: Any, p: Placement, capacity: int,
-                         slot_bytes: int) -> Optional[Any]:
+                         slot_bytes: int,
+                         transport: Any = None) -> Optional[Any]:
     """``compile(adaptive=True)``: lower an eligible farm stage to an
     :class:`~repro.core.runtime.AdaptiveFarmNode` — one host boundary node
     whose engine (thread farm / process farm) the runtime supervisor can
@@ -882,6 +886,7 @@ def _maybe_adaptive_node(s: Any, p: Placement, capacity: int,
         # the backlog waits in the node's input queue, which survives the
         # swap.  A few items per lane is all throughput needs.
         capacity=max(2, min(capacity, 8)), slot_bytes=slot_bytes,
+        transport=transport,
         label=f"adaptive_farm[{width}]", can_process=can_proc,
         thread_est_s=(c.host_time(width) if c is not None else None))
 
@@ -907,8 +912,22 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
          a2a_capacity_factor: Optional[float] = None,
          shm_slot_bytes: int = 1 << 16, adaptive: bool = False,
          remote_workers: Optional[Sequence] = None,
-         net_credit: int = 32) -> Any:
-    """Build the runner for a placed graph (stage 4)."""
+         net_credit: int = 32, transport: Any = None) -> Any:
+    """Build the runner for a placed graph (stage 4).
+
+    ``transport`` (a :class:`~repro.core.shm.TransportConfig`, or a dict of
+    its fields) tunes every shared-memory lane the lowering builds:
+    ``ring_slots`` (farm-lane depth cap, default 64), ``grid_slots`` (a2a
+    grid-segment depth cap, default 32 — the grid is nL x nR eagerly
+    allocated), ``slot_bytes`` (fixed slot payload, default 64 KiB),
+    ``arena_bytes`` (slab arena for oversize ndarrays, default 4 MiB),
+    ``bounded`` (False grows uSPSC segment chains instead of
+    back-pressuring), and ``batch``/``flush_s`` (vectored-lane flush
+    policy).  When omitted, the legacy ``shm_slot_bytes=`` knob still sizes
+    the slots and everything else takes the defaults."""
+    from .shm import TransportConfig, as_transport
+    tc = (as_transport(transport) if transport is not None
+          else TransportConfig(slot_bytes=shm_slot_bytes))
     stages = _top_stages(graph)
     placements = [s.placement if isinstance(s.placement, Placement)
                   else Placement("host") for s in stages]
@@ -921,7 +940,8 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
     if adaptive:
         lowered = []
         for i, (s, p) in enumerate(zip(stages, placements)):
-            node = _maybe_adaptive_node(s, p, capacity, shm_slot_bytes)
+            node = _maybe_adaptive_node(s, p, capacity, tc.slot_bytes,
+                                        transport=tc)
             if node is None:
                 lowered.append(s)
                 continue
@@ -956,7 +976,7 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
     # process -> device -> remote programs compose freely
     has_process = any(p.target == "host_process" for p in placements)
     if has_process:
-        lowered = [(_lower_process_stage(s, p, capacity, shm_slot_bytes)
+        lowered = [(_lower_process_stage(s, p, capacity, tc)
                     if p.target == "host_process" else s)
                    for s, p in zip(stages, placements)]
         g2 = FFGraph(lowered[0] if len(lowered) == 1 else PipeG(lowered))
@@ -1033,7 +1053,7 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
                   shm_slot_bytes: int = 1 << 16,
                   adaptive: bool = False,
                   remote_workers: Optional[Sequence] = None,
-                  net_credit: int = 32) -> Any:
+                  net_credit: int = 32, transport: Any = None) -> Any:
     """Run the staged pipeline: normalize -> annotate -> place -> emit.
 
     Note: stage-index keys in ``placements=`` refer to the *normalized*
@@ -1054,7 +1074,13 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
     unlocks the ``host_remote`` target: ``place`` costs eligible farms
     against the calibrated network hop (``mode="remote"`` forces it), and
     ``emit`` lowers them to :class:`~repro.core.net.RemoteFarmNode`
-    boundary stages with a ``net_credit``-deep in-flight window per lane."""
+    boundary stages with a ``net_credit``-deep in-flight window per lane.
+
+    ``transport=`` (a :class:`~repro.core.shm.TransportConfig` or a dict of
+    its fields) tunes every shared-memory lane of the process tier — ring
+    depths, slot size, arena size, bounded-vs-uSPSC, batch flush policy;
+    see :func:`emit` for the knobs and their defaults.  It supersedes the
+    legacy ``shm_slot_bytes=`` when both are given."""
     if mode not in ("auto", "host", "process", "remote", "device"):
         raise GraphError(f"unknown compile mode {mode!r}")
     if mode == "device" and plan is None:
@@ -1075,4 +1101,5 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
                 feedback_steps=feedback_steps, device_batch=device_batch,
                 a2a_capacity_factor=a2a_capacity_factor,
                 shm_slot_bytes=shm_slot_bytes, adaptive=adaptive,
-                remote_workers=remote_workers, net_credit=net_credit)
+                remote_workers=remote_workers, net_credit=net_credit,
+                transport=transport)

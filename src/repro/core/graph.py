@@ -452,7 +452,8 @@ class FFGraph:
                 shm_slot_bytes: int = 1 << 16,
                 adaptive: bool = False,
                 remote_workers: Optional[list] = None,
-                net_credit: int = 32) -> "Runner":
+                net_credit: int = 32,
+                transport: Any = None) -> "Runner":
         """The staged compile pipeline ``normalize -> annotate -> place ->
         emit`` (core/compiler.py):
 
@@ -486,9 +487,16 @@ class FFGraph:
         feedback channel).  ``a2a_capacity_factor`` bounds the device
         all_to_all expert lanes (default: lossless, host-parity).
         ``shm_slot_bytes`` sizes the fixed shared-memory ring slots of
-        process-placed farms (raise it for large batches).  ``mode`` forces
-        placement: "host", "process", "remote", "device", or cost-driven
-        "auto".
+        process-placed farms (raise it for large batches).  ``transport=``
+        (a :class:`~repro.core.shm.TransportConfig` or dict of its fields)
+        tunes the whole shared-memory transport instead: ``ring_slots``
+        (farm-lane depth cap, default 64), ``grid_slots`` (a2a grid-segment
+        depth cap, default 32), ``slot_bytes`` (default 64 KiB),
+        ``arena_bytes`` (oversize-ndarray slab, default 4 MiB), ``bounded``
+        (False = unbounded uSPSC worker lanes), and ``batch``/``flush_s``
+        (vectored flush policy); it supersedes ``shm_slot_bytes`` when both
+        are given.  ``mode`` forces placement: "host", "process", "remote",
+        "device", or cost-driven "auto".
 
         ``remote_workers=["host:port", ...]`` names a pool of
         ``python -m repro.launch.worker`` worker pools (or
@@ -515,7 +523,8 @@ class FFGraph:
                              shm_slot_bytes=shm_slot_bytes,
                              adaptive=adaptive,
                              remote_workers=remote_workers,
-                             net_credit=net_credit)
+                             net_credit=net_credit,
+                             transport=transport)
 
     def lower(self, plan: Any = None, *, capacity: int = 512,
               results_capacity: int = 4096, axis: str = "data") -> "Runner":

@@ -188,20 +188,34 @@ class HostCalibration:
     proc_hop_s: float           # per-item process-lane (shm ring) hop cost
     device_dispatch_s: float    # per-microbatch host<->device boundary cost
     net_hop_s: float = 5e-4     # per-item network-lane (TCP frame) hop cost
+    # per-item cost of the *vectored* process lane (push_many/pop_many
+    # amortize the index traffic and the pickling over a batch) — what the
+    # batched farm transport actually pays per item
+    shm_batched_hop_s: float = 5e-5
+    # streaming bandwidth of the slab arena (oversize-ndarray path), GB/s
+    arena_bw_gbs: float = 2.0
     source: str = "default"
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
+    def proc_hop_effective_s(self) -> float:
+        """The per-item process-lane cost placement should charge.  The
+        farm transport is batched, so the amortized hop is the honest
+        per-item price; capped by ``proc_hop_s`` so a noisy batched probe
+        can never make the process tier look *worse* than per-item."""
+        return min(self.proc_hop_s, self.shm_batched_hop_s)
+
 
 # conservative fallbacks, used only until/unless calibrate() has run
 DEFAULT_CALIBRATION = HostCalibration(
     peak_flops=5e10, queue_hop_s=2e-5, proc_hop_s=2e-4,
-    device_dispatch_s=2e-5, net_hop_s=5e-4, source="default")
+    device_dispatch_s=2e-5, net_hop_s=5e-4, shm_batched_hop_s=5e-5,
+    arena_bw_gbs=2.0, source="default")
 
-# version 2: net_hop_s joined the constants (version-1 caches predate the
-# distributed tier and must miss cleanly)
-_CALIB_VERSION = 2
+# version 3: shm_batched_hop_s + arena_bw_gbs joined (the batched uSPSC
+# transport); version 2 added net_hop_s — older caches must miss cleanly
+_CALIB_VERSION = 3
 _calibration: Optional[HostCalibration] = None
 
 
@@ -305,6 +319,104 @@ def _measure_proc_hop(n: int = 200) -> float:
     return max(rtt / 2.0, 1e-9)
 
 
+def _echo_many_main(in_lane, out_lane, batch: int) -> None:
+    """Calibration child: bounce items back in vectored batches (batched
+    proc-lane hop probe — same pop_many/push_many path the farm workers use)."""
+    from .node import EOS
+    done = False
+    while not done:
+        out = []
+        for item, _seq in in_lane.pop_many(batch):
+            if item is EOS:
+                done = True
+                break
+            out.append(item)
+        if out:
+            out_lane.push_many(out)
+    out_lane.push_eos()
+
+
+def _measure_shm_batched_hop(n: int = 2000, batch: int = 32) -> float:
+    """Per-item cost of the *vectored* process lane: same streaming echo
+    shape as :func:`_measure_proc_hop`, but both sides move items with
+    ``try_push_many``/``try_pop_many`` so the index traffic and the pickling
+    amortize over the batch.  This is what a batched farm hop actually costs
+    per item, and what ``place`` should charge for the process tier."""
+    from .process import _mp_context, _quiet_fork
+    from .shm import ShmSPSCQueue
+    ping = ShmSPSCQueue(capacity=64)
+    pong = ShmSPSCQueue(capacity=64)
+    proc = _mp_context().Process(target=_echo_many_main,
+                                 args=(ping, pong, batch),
+                                 daemon=True, name="ff-calibrate-echo-many")
+    with _quiet_fork():
+        proc.start()
+    items = list(range(batch))                  # small items: the batch win
+    try:
+        ping.push_many(items, timeout=5.0)      # warm both directions
+        got = 0
+        deadline = time.monotonic() + 5.0
+        while got < batch:
+            got += len(pong.try_pop_many(batch))
+            if time.monotonic() > deadline:
+                raise TimeoutError("batched-hop calibration warmup stalled")
+        sent = recv = 0
+        deadline = time.monotonic() + 10.0
+        t0 = time.perf_counter()
+        while recv < n:
+            progressed = False
+            if sent < n:
+                k = ping.try_push_many(items[:min(batch, n - sent)])
+                sent += k
+                progressed = progressed or k > 0
+            k = len(pong.try_pop_many(batch))
+            recv += k
+            progressed = progressed or k > 0
+            if not progressed:
+                if time.monotonic() > deadline:
+                    raise TimeoutError("batched-hop calibration stalled")
+                time.sleep(1e-6)
+        rtt = 2.0 * (time.perf_counter() - t0) / n  # keep rtt/2 == per hop
+    finally:
+        try:
+            ping.push_eos(timeout=1.0)
+        except TimeoutError:
+            pass
+        proc.join(timeout=5.0)
+        if proc.is_alive():
+            proc.terminate()
+        ping.destroy()
+        pong.destroy()
+    return max(rtt / 2.0, 1e-9)
+
+
+def _measure_arena_bw(nbytes: int = 4 << 20, reps: int = 5) -> float:
+    """Streaming bandwidth (GB/s) of the slab-arena path: one oversize
+    ndarray through an arena-backed lane per rep (producer copy in + consumer
+    copy out), in-process so it measures memory bandwidth, not scheduling."""
+    import numpy as np
+    from .shm import ShmSPSCQueue
+    q = ShmSPSCQueue(capacity=4, slot_bytes=1024, arena_bytes=2 * nbytes)
+    try:
+        a = np.zeros(nbytes // 4, dtype=np.float32)
+        q.try_push(a)                           # warm the mappings
+        q.try_pop()
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            if not q.try_push(a):
+                break
+            ok, _ = q.try_pop()
+            if not ok:
+                break
+            best = min(best, time.perf_counter() - t0)
+        if not (best < float("inf")) or q.arena_pushes == 0:
+            return DEFAULT_CALIBRATION.arena_bw_gbs
+        return max(nbytes / best / 1e9, 1e-3)
+    finally:
+        q.destroy()
+
+
 def _measure_net_hop(n: int = 200) -> float:
     """Per-item network-lane hop cost, measured over loopback TCP with the
     actual frame codec of ``core/net.py`` (raw-ndarray fast path).  Streamed
@@ -403,6 +515,8 @@ def calibrate(cache: bool = True) -> HostCalibration:
         proc_hop_s=_measure_proc_hop(),
         device_dispatch_s=_measure_device_dispatch(),
         net_hop_s=_measure_net_hop(),
+        shm_batched_hop_s=_measure_shm_batched_hop(),
+        arena_bw_gbs=_measure_arena_bw(),
         source="measured")
     _calibration = c
     if cache:
@@ -434,6 +548,8 @@ def _load_cached_calibration() -> Optional[HostCalibration]:
             proc_hop_s=float(d["proc_hop_s"]),
             device_dispatch_s=float(d["device_dispatch_s"]),
             net_hop_s=float(d["net_hop_s"]),
+            shm_batched_hop_s=float(d["shm_batched_hop_s"]),
+            arena_bw_gbs=float(d["arena_bw_gbs"]),
             source="cached")
     except (OSError, ValueError, KeyError, TypeError):
         # any unreadable/corrupt cache is a miss, never a crash

@@ -53,8 +53,9 @@ from typing import Any, Callable, Dict, List, Optional
 
 from .node import EOS, FFNode, GO_ON
 from .queues import QueueClosed
-from .shm import (ShmError, ShmMPMCGrid, ShmMPSCQueue, ShmSPMCQueue,
-                  ShmSPSCQueue, WorkerStats)
+from .shm import (BatchedLaneWriter, ShmError, ShmMPMCGrid, ShmMPSCQueue,
+                  ShmSPMCQueue, ShmSPSCQueue, ShmUSPSCQueue, TransportConfig,
+                  WorkerStats, as_transport)
 from .skeletons import AutoscaleLB
 
 # ship a WorkerStats CPU-time record back every this many processed items
@@ -95,66 +96,170 @@ class WorkerCrashed(RuntimeError):
     """A farm worker process exited without finishing its stream."""
 
 
+_NUMA_SYSFS = "/sys/devices/system/node"
+_numa_cache: Optional[List[List[int]]] = None
+
+
+def _parse_cpulist(text: str) -> List[int]:
+    """Kernel cpulist format: ``0-3,8-11`` -> [0,1,2,3,8,9,10,11]."""
+    cpus: List[int] = []
+    for part in text.strip().split(","):
+        if not part:
+            continue
+        if "-" in part:
+            lo, hi = part.split("-", 1)
+            cpus.extend(range(int(lo), int(hi) + 1))
+        else:
+            cpus.append(int(part))
+    return cpus
+
+
+def _numa_topology(refresh: bool = False) -> List[List[int]]:
+    """CPU ids per NUMA node from sysfs, or ``[]`` when the topology is
+    unreadable or trivial (a single node — e.g. the 2-vCPU CI container),
+    in which case every NUMA-aware path degrades to the plain behaviour."""
+    global _numa_cache
+    if _numa_cache is not None and not refresh:
+        return _numa_cache
+    nodes: List[List[int]] = []
+    try:
+        for entry in sorted(os.listdir(_NUMA_SYSFS)):
+            if not (entry.startswith("node") and entry[4:].isdigit()):
+                continue
+            with open(os.path.join(_NUMA_SYSFS, entry, "cpulist")) as f:
+                cpus = _parse_cpulist(f.read())
+            if cpus:
+                nodes.append(cpus)
+    except OSError:
+        nodes = []
+    _numa_cache = nodes if len(nodes) >= 2 else []
+    return _numa_cache
+
+
 def _pin(idx: int) -> None:
     # FastFlow pins its farm threads round-robin onto cores
     # (ff_mapping_utils); do the same for worker processes — schedulers
-    # on shared hosts otherwise stack them onto one core
+    # on shared hosts otherwise stack them onto one core.  With a readable
+    # multi-node NUMA topology, spread workers round-robin across nodes
+    # first (one memory controller each, matching their lanes' first-touch
+    # placement), then round-robin cores within the node.
     try:
-        os.sched_setaffinity(0, {idx % (os.cpu_count() or 1)})
+        nodes = _numa_topology()
+        if nodes:
+            cpus = sorted(nodes[idx % len(nodes)])
+            os.sched_setaffinity(0, {cpus[(idx // len(nodes)) % len(cpus)]})
+        else:
+            os.sched_setaffinity(0, {idx % (os.cpu_count() or 1)})
     except (AttributeError, OSError):
         pass
 
 
-def _worker_main(idx: int, fn: Callable, in_lane, out_lane) -> None:
-    """Child process body: pop an item, push ``fn(item)``.
+@contextlib.contextmanager
+def _node_affinity(cpus: Optional[List[int]]):
+    """Temporarily bind the calling (parent) process to one NUMA node's
+    CPUs while it creates and first-touches a worker's lane segments, so
+    the pages land on the node the worker will be pinned to.  No-op when
+    ``cpus`` is falsy or affinity syscalls are unavailable."""
+    if not cpus:
+        yield
+        return
+    try:
+        prev = os.sched_getaffinity(0)
+        os.sched_setaffinity(0, set(cpus))
+    except (AttributeError, OSError):
+        yield
+        return
+    try:
+        yield
+    finally:
+        try:
+            os.sched_setaffinity(0, prev)
+        except OSError:
+            pass
+
+
+def _first_touch(lane: Any) -> None:
+    """Write one byte per page of a lane's segments so the (tmpfs) pages
+    are allocated now, on the creating thread's current node, instead of
+    wherever the first pushing process happens to run."""
+    bufs = []
+    for seg in (lane, getattr(lane, "_w", None)):
+        buf = getattr(seg, "_buf", None)
+        if buf is not None:
+            bufs.append(buf)
+    arena = getattr(lane, "_arena", None)
+    if arena is not None and arena._buf is not None:
+        bufs.append(arena._buf)
+    for buf in bufs:
+        for off in range(0, len(buf), 4096):
+            buf[off] = 0
+
+
+def _worker_main(idx: int, fn: Callable, in_lane, out_lane,
+                 batch: int = 16, flush_s: float = 2e-3) -> None:
+    """Child process body: pop a *batch* of items, push a batch of results.
 
     Items ride the lanes bare — each lane is FIFO, so the parent matches
     results to sequence numbers by arrival order and nothing extra crosses
-    the wire (bare ndarrays keep the raw-slab fast path).  Every
-    ``_STATS_EVERY`` items (and once more before EOS) the worker also ships
-    a :class:`~repro.core.shm.WorkerStats` record — true per-item CPU
-    seconds from ``time.thread_time`` — which the parent collector folds
-    into its stats *without* consuming a sequence slot.  EOS (or a closed
-    input lane) terminates; an exception in ``fn`` ships an error record
-    followed by EOS so the parent collector both surfaces the error and
-    stops waiting on this lane."""
+    the wire (bare ndarrays keep the raw-slab / arena fast path).  The loop
+    is vectored end to end: ``pop_many`` takes whatever the emitter has
+    published (one head write for the lot — naturally latency-adaptive,
+    batch size tracks the backlog), results buffer in a
+    :class:`~repro.core.shm.BatchedLaneWriter` that flushes on batch-full,
+    on the ``flush_s`` age timeout, and always before this worker would
+    block on an empty input lane — so a stalled stream never strands
+    results in the buffer.  Every ``_STATS_EVERY`` items (and once more
+    before EOS) the worker also ships a
+    :class:`~repro.core.shm.WorkerStats` record — true per-item CPU seconds
+    from ``time.thread_time`` — which the parent collector folds into its
+    stats *without* consuming a sequence slot.  EOS (or a closed input
+    lane) terminates; an exception in ``fn`` ships an error record (after
+    flushing results already computed) followed by EOS so the parent
+    collector both surfaces the error and stops waiting on this lane."""
     _pin(idx)
+    writer = BatchedLaneWriter(out_lane, batch=batch, flush_s=flush_s)
     done = 0
     cpu_ema = 0.0
+    eos = False
     try:
-        while True:
-            try:
-                got = in_lane.pop()
-            except QueueClosed:                     # parent unwound the farm
-                break
-            if got is EOS:
-                break
-            try:
-                c0 = time.thread_time()
-                out = fn(got)
-                cpu = time.thread_time() - c0
-            except BaseException as e:  # noqa: BLE001 - shipped to the parent
-                out_lane.push_err(ShmError(idx, repr(e),
-                                           traceback.format_exc()))
-                return
-            out_lane.push(out)
-            done += 1
-            cpu_ema = cpu if cpu_ema == 0.0 else 0.9 * cpu_ema + 0.1 * cpu
-            if done % _STATS_EVERY == 0:
-                try:        # best-effort: a full lane must not stall results
-                    out_lane.push(WorkerStats(idx, done, cpu_ema),
-                                  timeout=1.0)
-                except (TimeoutError, QueueClosed):
-                    pass
+        while not eos:
+            got = in_lane.try_pop_many(batch)
+            if not got:
+                # going idle: ship buffered results before parking on the
+                # lane (the EOS/timeout side of the adaptive flush)
+                try:
+                    writer.flush()
+                except QueueClosed:
+                    break
+                try:
+                    got = in_lane.pop_many(batch)
+                except QueueClosed:                 # parent unwound the farm
+                    break
+            for item, _seq in got:
+                if item is EOS:
+                    eos = True
+                    break
+                try:
+                    c0 = time.thread_time()
+                    out = fn(item)
+                    cpu = time.thread_time() - c0
+                except BaseException as e:  # noqa: BLE001 - to the parent
+                    writer.push_err(ShmError(idx, repr(e),
+                                             traceback.format_exc()))
+                    return
+                writer.put(out)
+                done += 1
+                cpu_ema = cpu if cpu_ema == 0.0 \
+                    else 0.9 * cpu_ema + 0.1 * cpu
+                if done % _STATS_EVERY == 0:
+                    # rides the result batch; consumes no sequence slot
+                    writer.put(WorkerStats(idx, done, cpu_ema))
+                writer.maybe_flush()
     finally:
         try:
             if done:
-                try:
-                    out_lane.push(WorkerStats(idx, done, cpu_ema),
-                                  timeout=1.0)
-                except (TimeoutError, QueueClosed):
-                    pass
-            out_lane.push_eos()
+                writer.put(WorkerStats(idx, done, cpu_ema))
+            writer.push_eos()       # flushes pending results first
         except BaseException:   # noqa: BLE001 - parent may be gone
             pass
         in_lane.detach()
@@ -180,17 +285,46 @@ class ProcessFarmNode(FFNode):
     def __init__(self, fns: List[Callable], pre: Optional[Callable] = None,
                  post: Optional[Callable] = None, capacity: int = 64,
                  slot_bytes: int = 1 << 16, label: str = "process_farm",
-                 autoscale: bool = False, min_workers: int = 1):
+                 autoscale: bool = False, min_workers: int = 1,
+                 transport: Optional[TransportConfig] = None):
         super().__init__()
         if not fns:
             raise ValueError("process farm with no workers")
+        tc = as_transport(transport)
+        if transport is not None:
+            # explicit transport knobs clamp/override the legacy params
+            capacity = max(2, min(capacity, tc.ring_slots))
+            slot_bytes = tc.slot_bytes
         self._fns = list(fns)
         self._pre = pre
         self._post = post
         self._label = label
         self._n = len(self._fns)
-        self._spmc = ShmSPMCQueue(self._n, capacity, slot_bytes)
-        self._mpsc = ShmMPSCQueue(self._n, capacity, slot_bytes)
+        self._batch = tc.batch
+        self._flush_s = tc.flush_s
+        # lanes build one worker at a time so each pair's pages can
+        # first-touch on the node the worker will be pinned to (a no-op
+        # without a readable multi-node topology — e.g. the CI container)
+        nodes = _numa_topology()
+        in_lanes: List[Any] = []
+        out_lanes: List[Any] = []
+        for i in range(self._n):
+            with _node_affinity(nodes[i % len(nodes)] if nodes else None):
+                if tc.bounded:
+                    in_lane: Any = ShmSPSCQueue(capacity, slot_bytes,
+                                                arena_bytes=tc.arena_bytes)
+                else:
+                    in_lane = ShmUSPSCQueue(max(capacity, 4), slot_bytes,
+                                            arena_bytes=tc.arena_bytes)
+                out_lane = ShmSPSCQueue(capacity, slot_bytes,
+                                        arena_bytes=tc.arena_bytes)
+                if nodes:
+                    _first_touch(in_lane)
+                    _first_touch(out_lane)
+            in_lanes.append(in_lane)
+            out_lanes.append(out_lane)
+        self._spmc = ShmSPMCQueue.from_lanes(in_lanes)
+        self._mpsc = ShmMPSCQueue.from_lanes(out_lanes)
         self._lb: Optional[AutoscaleLB] = None
         if autoscale:
             self._lb = AutoscaleLB(min_workers=min_workers,
@@ -202,7 +336,8 @@ class ProcessFarmNode(FFNode):
         # any device work start) and park on their empty input lanes
         self._procs = [
             ctx.Process(target=_worker_main,
-                        args=(i, fn, self._spmc.lanes[i], self._mpsc.lanes[i]),
+                        args=(i, fn, self._spmc.lanes[i], self._mpsc.lanes[i],
+                              self._batch, self._flush_s),
                         daemon=True, name=f"ff-proc-worker-{i}")
             for i, fn in enumerate(self._fns)]
         with _quiet_fork():
@@ -308,8 +443,10 @@ class ProcessFarmNode(FFNode):
         delay = 1e-6
         last_liveness = time.monotonic()
         while not all(self._eos_seen):
-            ok, got, lane = self._mpsc.try_pop_any()
-            if not ok:
+            # vectored drain: one head publish per visited lane, the whole
+            # published backlog in one call
+            batch = self._mpsc.try_pop_any_many(4 * self._batch)
+            if not batch:
                 # adaptive backoff: a hard poll here steals CPU from the
                 # very workers it waits on (they share the machine's cores)
                 now = time.monotonic()
@@ -322,36 +459,39 @@ class ProcessFarmNode(FFNode):
                 delay = min(delay * 2, 1e-3)
                 continue
             delay = 1e-6
-            if got is EOS:
-                self._eos_seen[lane] = True
-                continue
-            if isinstance(got, ShmError):
-                self.error = WorkerCrashed(
-                    f"{self._label}: worker {got.worker} raised "
-                    f"{got.exc}\n{got.tb}")
-                self._fail()
-                return
-            if isinstance(got, WorkerStats):
-                # a stats record, not a stream item: it consumed no sequence
-                # slot, so fold it in *before* touching the lane's seq map
-                with self._stats_lock:
-                    self._worker_cpu[got.worker] = (got.items, got.cpu_ema_s)
-                continue
-            hold[self._lane_seqs[lane].popleft()] = got
-            while nxt in hold:
-                out = hold.pop(nxt)
-                nxt += 1
-                if self._post is not None:
-                    out = self._post(out)
-                now = time.perf_counter()
-                with self._stats_lock:
-                    if self._last_delivery is not None:
-                        gap = now - self._last_delivery
-                        self._gap_ema = gap if self._gap_ema == 0.0 \
-                            else 0.8 * self._gap_ema + 0.2 * gap
-                    self._last_delivery = now
-                    self._delivered += 1
-                self.ff_send_out(out)
+            for got, lane, _seq in batch:
+                if got is EOS:
+                    self._eos_seen[lane] = True
+                    continue
+                if isinstance(got, ShmError):
+                    self.error = WorkerCrashed(
+                        f"{self._label}: worker {got.worker} raised "
+                        f"{got.exc}\n{got.tb}")
+                    self._fail()
+                    return
+                if isinstance(got, WorkerStats):
+                    # a stats record, not a stream item: it consumed no
+                    # sequence slot, so fold it in *before* touching the
+                    # lane's seq map
+                    with self._stats_lock:
+                        self._worker_cpu[got.worker] = (got.items,
+                                                        got.cpu_ema_s)
+                    continue
+                hold[self._lane_seqs[lane].popleft()] = got
+                while nxt in hold:
+                    out = hold.pop(nxt)
+                    nxt += 1
+                    if self._post is not None:
+                        out = self._post(out)
+                    now = time.perf_counter()
+                    with self._stats_lock:
+                        if self._last_delivery is not None:
+                            gap = now - self._last_delivery
+                            self._gap_ema = gap if self._gap_ema == 0.0 \
+                                else 0.8 * self._gap_ema + 0.2 * gap
+                        self._last_delivery = now
+                        self._delivered += 1
+                    self.ff_send_out(out)
 
     def _check_crashed(self) -> bool:
         for i, p in enumerate(self._procs):
@@ -607,16 +747,24 @@ class ProcessA2ANode(FFNode):
     def __init__(self, left_fns: List[Callable], right_fns: List[Callable],
                  router: Optional[Callable[[Any, int], int]] = None,
                  capacity: int = 64, slot_bytes: int = 1 << 16,
-                 label: str = "process_a2a"):
+                 label: str = "process_a2a",
+                 transport: Optional[TransportConfig] = None):
         super().__init__()
         if not left_fns or not right_fns:
             raise ValueError("process a2a needs workers on both sides")
+        tc = as_transport(transport)
+        if transport is not None:
+            capacity = max(2, min(capacity, tc.grid_slots))
+            slot_bytes = tc.slot_bytes
         self._nL = len(left_fns)
         self._nR = len(right_fns)
         self._label = label
-        self._spmc = ShmSPMCQueue(self._nL, capacity, slot_bytes)
-        self._grid = ShmMPMCGrid(self._nL, self._nR, capacity, slot_bytes)
-        self._mpsc = ShmMPSCQueue(self._nR, capacity, slot_bytes)
+        self._spmc = ShmSPMCQueue(self._nL, capacity, slot_bytes,
+                                  arena_bytes=tc.arena_bytes)
+        self._grid = ShmMPMCGrid(self._nL, self._nR, capacity, slot_bytes,
+                                 arena_bytes=tc.arena_bytes)
+        self._mpsc = ShmMPSCQueue(self._nR, capacity, slot_bytes,
+                                  arena_bytes=tc.arena_bytes)
         ctx = _mp_context()
         self._left_procs = [
             ctx.Process(target=_a2a_left_main,

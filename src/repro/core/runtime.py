@@ -111,7 +111,8 @@ class AdaptiveFarmNode(FFNode):
                  post: Optional[Callable] = None, tier: str = "host",
                  capacity: int = 64, slot_bytes: int = 1 << 16,
                  label: str = "adaptive_farm", can_process: bool = True,
-                 thread_est_s: Optional[float] = None):
+                 thread_est_s: Optional[float] = None,
+                 transport=None):
         super().__init__()
         if tier not in _TIERS:
             raise GraphError(f"adaptive tier must be one of {_TIERS}")
@@ -124,6 +125,7 @@ class AdaptiveFarmNode(FFNode):
         self._post = post
         self._cap = capacity
         self._slot_bytes = slot_bytes
+        self._transport = transport
         self._label = label
         self._can_process = can_process
         self.thread_est_s = thread_est_s
@@ -167,6 +169,7 @@ class AdaptiveFarmNode(FFNode):
             eng = ProcessFarmNode(fns, pre=self._pre, post=self._post,
                                   capacity=self._cap,
                                   slot_bytes=self._slot_bytes,
+                                  transport=self._transport,
                                   label=f"{self._label}/process")
         else:
             eng = ThreadFarmNode(fns, pre=self._pre, post=self._post,
@@ -440,7 +443,9 @@ class Supervisor:
         if tier == "host" and h.can_migrate("host_process"):
             cpu = float(s.get("svc_cpu_ema_s", 0.0) or 0.0)
             ratio = s.get("gil_ratio")
-            proc_est = max(cpu / max(1, max_w), calib.proc_hop_s)
+            # the farm lanes batch their hops, so charge the amortized cost
+            hop = calib.proc_hop_effective_s()
+            proc_est = max(cpu / max(1, max_w), hop)
             # the GIL-serialization evidence, either form: (a) worker calls'
             # CPU/wall ratio well below 1 under >=2 concurrently active
             # workers (they wait on the GIL, not on work), or (b) observed
@@ -455,7 +460,7 @@ class Supervisor:
             # like GIL wait but gains nothing from processes, (d)
             # backlogged (the stage is the bottleneck), and (e) predicted
             # to win past the hysteresis margin
-            if (cpu > 5.0 * calib.proc_hop_s and serialized
+            if (cpu > 5.0 * hop and serialized
                     and depth >= 1.0
                     and proc_est < self.hysteresis * t_obs):
                 self._migrate(i, h, "host_process",
@@ -469,7 +474,8 @@ class Supervisor:
                 if h.tier == "host_process":
                     h.resize(max_w)
         elif tier == "host_process":
-            hop = float(s.get("hop_ema_s", 0.0) or 0.0) or calib.proc_hop_s
+            hop = float(s.get("hop_ema_s", 0.0) or 0.0) \
+                or calib.proc_hop_effective_s()
             cpu = float(s.get("svc_cpu_ema_s", 0.0) or 0.0)
             if cpu > 0.0:
                 # true-service-time comparison: the workers now ship their

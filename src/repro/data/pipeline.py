@@ -72,7 +72,8 @@ class DataPipeline:
     def __init__(self, source, shardings=None, n_batches: Optional[int] = None,
                  prefetch: int = 2, compute: Optional[Callable] = None,
                  plan=None, compute_workers: Union[int, str] = 1,
-                 shm_slot_bytes: int = 1 << 20, adaptive: bool = False):
+                 shm_slot_bytes: int = 1 << 20, adaptive: bool = False,
+                 transport: Optional[Any] = None):
         self.source = source
         placements = None
         if compute is not None and compute_workers not in (None, 1):
@@ -98,7 +99,8 @@ class DataPipeline:
             plan if compute is not None else None,
             capacity=max(2, prefetch), results_capacity=max(2, prefetch),
             device_batch=1, placements=placements,
-            shm_slot_bytes=shm_slot_bytes, adaptive=adaptive)
+            shm_slot_bytes=shm_slot_bytes, adaptive=adaptive,
+            transport=transport)
         self.placements = getattr(self._runner, "placements", [])
         # adaptive mode: a Supervisor thread samples the runner's stage
         # handles, re-places the compute farm live (width + thread/process

@@ -32,7 +32,14 @@ def main():
                     help="attach the runtime Supervisor: live stage stats "
                          "sampling + cost-model observation (re-placement "
                          "events land in the placement report)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="tuned host runtime: tcmalloc LD_PRELOAD when "
+                         "installed + single-threaded XLA:CPU Eigen "
+                         "(re-execs once; see repro.launch.tuned)")
     args = ap.parse_args()
+    if args.tuned:
+        from .tuned import apply_tuned
+        apply_tuned()
 
     cfg = get(args.arch)
     if args.arch != "ff-tiny":

@@ -38,7 +38,14 @@ def main():
                     help="adaptive data pipeline: a runtime Supervisor "
                          "re-places eligible farm stages live and feeds "
                          "observed costs back into the calibration cache")
+    ap.add_argument("--tuned", action="store_true",
+                    help="tuned host runtime: tcmalloc LD_PRELOAD when "
+                         "installed + single-threaded XLA:CPU Eigen "
+                         "(re-execs once; see repro.launch.tuned)")
     args = ap.parse_args()
+    if args.tuned:
+        from .tuned import apply_tuned
+        apply_tuned()
 
     cfg = get(args.arch)
     if args.reduced or args.arch != "ff-tiny":

@@ -5,8 +5,9 @@ against the committed ``benchmarks/BENCH_baseline.json``.
 Gated fields, by shape:
 
 - ``items_per_s`` (higher is better) and ``ratio_best`` (the best
-  demonstrated pair ratio of an interleaved comparison run, higher is
-  better) fail below ``(1 - max_regression)`` of the baseline;
+  demonstrated pair ratio of an interleaved comparison run — process-vs-
+  thread farm/a2a, vectored-vs-per-item shm lane — higher is better) fail
+  below ``(1 - max_regression)`` of the baseline;
 - ``reconfig_latency_ms`` (lower is better — the adaptive runtime's live
   drain-and-swap cost) and ``net_rtt_us`` (lower is better — the
   distributed tier's loopback lane round-trip, the per-item price of
