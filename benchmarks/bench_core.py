@@ -539,6 +539,80 @@ def bench_net_hop(smoke: bool = False):
     ]
 
 
+# --- device tier: fused segment (one jitted program) vs per-stage dispatch ----
+def bench_device_fusion(smoke: bool = False):
+    """The device-segment-fusion gate: the same 4-stage pure pipeline on the
+    device tier, compiled fused (ONE jitted program, one dispatch + one host
+    sync per run — ``core/fuse.py``) vs per-stage (``fuse=False``: four
+    dispatches + four ``block_until_ready`` host round-trips per run, the
+    pre-fusion emit).  Same interleaved-adjacent-pairs protocol as the farm
+    benches; ``ratio_best`` is the demonstrated fused speedup the CI gate
+    holds."""
+    import statistics
+
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import pipeline
+    from repro.core.plan import single_device_plan
+
+    plan = single_device_plan()
+    # short runs: per-run dispatch + host-sync overhead is the quantity
+    # under test, and it is a fixed per-run cost — small streams keep it
+    # from being diluted by per-item work
+    n_items = 4
+    n_runs = 16 if smoke else 32
+    n_pairs = 7 if smoke else 9
+    item = np.linspace(0.0, 1.0, 64, dtype=np.float32)
+    stream = [item * (i + 1) for i in range(n_items)]
+
+    def build(fuse: bool):
+        g = pipeline(lambda x: x * 1.0001 + 0.1,
+                     lambda x: jnp.tanh(x) + x,
+                     lambda x: x * 0.999 - 0.05,
+                     lambda x: (x + x * x) * 0.5)
+        return g.compile(plan, mode="device", fuse=fuse)
+
+    fused, per_stage = build(True), build(False)
+    assert len(fused.stats()["stages"]) == 1          # one program per run
+    assert len(per_stage.stats()["stages"]) == 4      # pre-fusion split
+
+    def run_once(r) -> float:
+        t0 = time.perf_counter()
+        for _ in range(n_runs):
+            out = r.run(stream)
+        dt = time.perf_counter() - t0
+        assert len(out) == n_items
+        return dt / (n_runs * n_items)
+
+    run_once(fused)                 # warmup: pay the traces outside pair 0
+    run_once(per_stage)
+    fused_t, split_t, ratios = [], [], []
+    for i in range(n_pairs):
+        if i % 2 == 0:
+            fu = run_once(fused)
+            sp = run_once(per_stage)
+        else:
+            sp = run_once(per_stage)
+            fu = run_once(fused)
+        fused_t.append(fu)
+        split_t.append(sp)
+        ratios.append(sp / fu)
+    fu_med = statistics.median(fused_t)
+    sp_med = statistics.median(split_t)
+    best = max(ratios)
+    med = statistics.median(ratios)
+    return [
+        ("device_pipeline_fused", fu_med * 1e6, f"{1/fu_med:.0f}items/s",
+         {"items_per_s": round(1 / fu_med, 1)}),
+        ("device_pipeline_per_stage", sp_med * 1e6, f"{1/sp_med:.0f}items/s",
+         {"items_per_s": round(1 / sp_med, 1)}),
+        ("device_fusion_speedup", fu_med * 1e6,
+         f"ratio={best:.2f}x (best of {n_pairs} interleaved pairs; "
+         f"median={med:.2f}x) 4 stages -> 1 program",
+         {"ratio_best": round(best, 3), "ratio_median": round(med, 3)}),
+    ]
+
+
 def bench_adaptive(smoke: bool = False):
     """The adaptive-runtime costs the CI gate watches:
 
@@ -654,6 +728,7 @@ def main() -> None:
                lambda: bench_a2a_backends(args.smoke),
                lambda: bench_shm_transport(args.smoke),
                lambda: bench_net_hop(args.smoke),
+               lambda: bench_device_fusion(args.smoke),
                lambda: bench_adaptive(args.smoke)]
     if not args.smoke:
         benches += [bench_spsc_queue, bench_farm_speedup,

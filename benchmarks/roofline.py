@@ -3,6 +3,13 @@ per-(arch x shape) table of compute/memory/collective terms, dominant
 bottleneck, MODEL_FLOPS ratio, and one-line recommendations.
 
     PYTHONPATH=src python -m benchmarks.roofline [--mesh sp|mp] [--tag t]
+
+``--autotune`` instead sweeps kernel tile sizes (``a2a_fused`` ``block_t``
+per (T, E, D) shape) on this host, prints the winners, and persists them
+into the perf_model cache (``REPRO_FF_CACHE``, same read-only-dir
+degradation as ``calibrate()``) so ``_pick_block`` and ``place`` pick them
+up in later runs.  ``--quick`` sweeps one small shape for CI cache
+pre-warming; ``--no-write`` keeps the sweep in-memory.
 """
 
 from __future__ import annotations
@@ -79,12 +86,91 @@ def table(rows, fmt="md"):
     return "\n".join(out)
 
 
+# ---------------------------------------------------------------------------
+# Tile autotuning (--autotune): sweep block_t per shape, persist winners
+# ---------------------------------------------------------------------------
+AUTOTUNE_SHAPES = [          # (T, E, Din) — batch length, experts, item width
+    (128, 4, 64),
+    (256, 4, 64),
+    (256, 8, 128),
+    (512, 4, 256),
+]
+QUICK_SHAPES = [(128, 4, 64)]
+BLOCK_CANDIDATES = [32, 64, 128, 256]
+
+
+def _time_call(fn, repeats=3):
+    import time
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(quick=False, write=True):
+    """Sweep ``a2a_fused`` ``block_t`` per shape on this host; returns the
+    winners dict and (optionally) persists it via ``perf_model``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import perf_model as pm
+    from repro.kernels.a2a_fused import a2a_fused
+
+    shapes = QUICK_SHAPES if quick else AUTOTUNE_SHAPES
+    entries = {}
+    for (T, E, D) in shapes:
+        key = jax.random.PRNGKey(T * 7919 + E * 131 + D)
+        k1, k2 = jax.random.split(key)
+        logits = jax.random.normal(k1, (T, E), jnp.float32)
+        xs = jax.random.normal(k2, (T, D), jnp.float32)
+        fns = tuple((lambda x, s=float(j + 1): x * s + s) for j in range(E))
+        cap = T // E  # bounded lanes: the interesting (drop-policy) regime
+        sweep = {}
+        for bt in [c for c in BLOCK_CANDIDATES if c <= T and T % c == 0]:
+            def run(bt=bt):
+                out, keep = a2a_fused(logits, xs, fns, cap, block_t=bt)
+                jax.block_until_ready((out, keep))
+            try:
+                run()                                    # compile / warm up
+                sweep[bt] = _time_call(run)
+            except Exception as exc:  # noqa: BLE001 - skip broken candidate
+                print(f"  [skip] block_t={bt} T={T}: {exc}", file=sys.stderr)
+        if not sweep:
+            continue
+        win = min(sweep, key=sweep.get)
+        entries[f"a2a_fused:T{T}:E{E}:D{D}"] = {
+            "block_t": int(win), "time_s": float(sweep[win]),
+            "sweep": {str(k): float(v) for k, v in sweep.items()},
+        }
+    n = pm.record_autotuned(entries, write=write)
+    hdr = ["shape", "winner block_t", "best s", "sweep"]
+    print("| " + " | ".join(hdr) + " |")
+    print("|" + "---|" * len(hdr))
+    for k, rec in entries.items():
+        sweep = " ".join(f"{b}:{t:.2e}" for b, t in rec["sweep"].items())
+        print(f"| {k} | {rec['block_t']} | {rec['time_s']:.2e} | {sweep} |")
+    print(f"# recorded {n} autotune entr{'y' if n == 1 else 'ies'} "
+          f"({'persisted' if write else 'in-memory only'})")
+    return entries
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="sp", choices=["sp", "mp"])
     ap.add_argument("--tag", default="")
     ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep kernel tiles and persist winners")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --autotune: one small shape (CI pre-warm)")
+    ap.add_argument("--no-write", action="store_true",
+                    help="with --autotune: do not persist results")
     args = ap.parse_args()
+    if args.autotune:
+        autotune(quick=args.quick, write=not args.no_write)
+        return
     rows = load(args.mesh, args.tag)
     if not rows:
         print("no dry-run results found; run: python -m repro.launch.dryrun --all",

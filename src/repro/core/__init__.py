@@ -86,14 +86,37 @@ explicit stages —
    backend on each eligible tier.
 
 ``emit`` covers every block on both targets: farms are ``shard_map`` over
-the data axis, ``all_to_all`` lowers to MoE-style dispatch/combine
-(``core.device.a2a_dispatch``, reusing the ``router_topk`` kernel and
-``expert_capacity``), and ``wrap_around`` lowers through
+the data axis, ``all_to_all`` lowers to ONE fused Pallas dispatch/combine
+kernel (``kernels.a2a_fused`` via ``core.device.a2a_dispatch``: route,
+capacity position, expert compute, and stream-order combine in a single
+``pallas_call``, per-expert lane cursors in VMEM scratch, ``expert_capacity``
+sizing the lanes, and the kernel itself sharded over the mesh in the
+lossless case), and ``wrap_around`` lowers through
 ``core.device.feedback_scan`` when ``compile(feedback_steps=K)`` bounds the
 loop.  ``lower(plan)`` stays as a thin compat wrapper forcing all-host
 (``plan=None``) or all-device placement.  The data pipeline, the serving
 engine, and the launch entry points are all expressed as FFGraph programs
 compiled through this pipeline.
+
+Device-segment fusion (``core.fuse``): between ``place`` and ``emit``,
+every maximal run of *adjacent* device-placed stages is greedily merged
+into one ``FusedSegment`` and lowered as ONE compiled program — a single
+``jax.jit``, one device put in, one host copy out per run, whether the run
+is a pipeline of pure stages, vmapped farm/``ffmap`` bodies, a fused-a2a
+hop, or a ``feedback_scan`` tail.  This is the paper's layered lesson
+applied to the device tier: composition must collapse into cheap
+communication, so N composed stages cost one dispatch, not N host
+round-trips.  ``compile(fuse=False)`` restores the one-program-per-stage
+emit (per-stage observability, A/B benchmarks —
+``benchmarks/bench_core.py``'s ``device_fusion_speedup`` gates the win in
+CI).  Jitted segments are cached across ``compile()`` calls keyed by
+fused-stage identity, so the adaptive Supervisor's re-place path reuses
+traced programs instead of retracing; ``place`` amortizes the calibrated
+``device_dispatch_s`` over each candidate run (plus the measured
+``fused_segment_s`` marginal), which is what lets fused device placement
+win at much smaller stage grain, and kernel tile sizes come from
+``benchmarks/roofline.py --autotune`` winners persisted in the
+``perf_model`` cache.
 
 The adaptive runtime (``core.runtime``) closes the stats -> placement loop
 *at runtime*: ``compile(adaptive=True)`` lowers eligible farms to

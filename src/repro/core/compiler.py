@@ -62,6 +62,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import perf_model as pm
+from .fuse import FusedSegment, fuse_device_segments, segment_key
 from .graph import (A2AG, DeviceRunner, FarmG, FFGraph, GraphError,
                     HostRunner, MapG, PipeG, SeqG, _device_fn, _is_pure_seq,
                     _pure_of)
@@ -457,6 +458,36 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
                       and not any(isinstance(s, A2AG) for s in stages)
                       and all(_device_eligible(s) for s in stages))
 
+    # fused-run lengths: after core/fuse.py, adjacent device stages share
+    # ONE _DeviceStageNode boundary, so a stage inside a candidate run of
+    # length L pays device_dispatch_s / L (its share of the one real
+    # dispatch) plus the calibrated fused_segment_s marginal — which is why
+    # fused device placement wins at much smaller stage grain than the old
+    # one-dispatch-per-stage model allowed
+    def _device_candidate(i: int, s: Any) -> bool:
+        ov = override_for(i, s)
+        if ov is not None:
+            return ov.target == "device"
+        if plan is None or graph._wrap or mode not in ("auto", "device"):
+            return False
+        if isinstance(s, FarmG) and s.autoscale:
+            return False
+        c = s.cost if isinstance(s.cost, CostEstimate) else CostEstimate()
+        return _device_eligible(s) and c.flops > 0
+
+    run_len = [1] * len(stages)
+    i = 0
+    while i < len(stages):
+        if _device_candidate(i, stages[i]):
+            j = i
+            while j < len(stages) and _device_candidate(j, stages[j]):
+                j += 1
+            for k in range(i, j):
+                run_len[k] = j - i
+            i = j
+        else:
+            i += 1
+
     for i, s in enumerate(stages):
         ov = override_for(i, s)
         c = s.cost if isinstance(s.cost, CostEstimate) else CostEstimate()
@@ -540,7 +571,9 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
         # autoscales its *processes* instead of threads
         autoscale = isinstance(s, FarmG) and s.autoscale
         host_t = max(c.host_time(host_width), calib.queue_hop_s)
-        dev_t = (c.device_time(n_chips, calib.device_dispatch_s)
+        dev_dispatch = (calib.device_dispatch_s / max(1, run_len[i])
+                        + calib.fused_segment_s)
+        dev_t = (c.device_time(n_chips, dev_dispatch)
                  if plan is not None and not autoscale
                  and _device_eligible(s) else None)
         # the process tier only pays off for demonstrably GIL-bound work
@@ -587,7 +620,9 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
         if target == "device":
             s.placement = Placement(
                 "device", n_chips,
-                f"roofline {dev_t*1e6:.1f}us < host {host_t*1e6:.1f}us")
+                f"roofline {dev_t*1e6:.1f}us < host {host_t*1e6:.1f}us"
+                + (f" (dispatch amortized over fused run of {run_len[i]})"
+                   if run_len[i] > 1 else ""))
         elif target == "host_remote":
             s.placement = Placement(
                 "host_remote", remote_width,
@@ -717,10 +752,14 @@ class _DeviceStageNode(FFNode):
     device never waits on the host unless the host truly falls behind."""
 
     def __init__(self, batched: Callable, axis_mult: int, device_batch: int,
-                 sharding: Any = None, label: str = "device"):
+                 sharding: Any = None, label: str = "device",
+                 jit_key: Optional[tuple] = None):
         super().__init__()
-        import jax
-        self._batched = jax.jit(batched)
+        from .fuse import jit_segment
+        # jit through the fused-segment cache: re-compile() of the same
+        # graph (the adaptive Supervisor's re-place path) reuses the traced
+        # program instead of re-jitting a fresh closure
+        self._batched = jit_segment(batched, jit_key)
         self._mult = max(1, axis_mult)
         self._B = max(int(device_batch), self._mult)
         self._sharding = sharding
@@ -746,19 +785,25 @@ class _DeviceStageNode(FFNode):
     def _flush(self) -> None:
         import jax
         import jax.numpy as jnp
-        items = [jax.tree.map(jnp.asarray, x) for x in self._buf]
+        import numpy as np
+        items = [jax.tree.map(np.asarray, x) for x in self._buf]
         self._buf = []
         n = len(items)
         pad = (-n) % self._mult
         items = items + items[:1] * pad
-        xs = jax.tree.map(lambda *ts: jnp.stack(ts), *items)
+        # stack on the host, ONE device put per leaf (jnp.asarray
+        # canonicalizes dtypes exactly like the per-item path did)
+        xs = jax.tree.map(lambda *ts: jnp.asarray(np.stack(ts)), *items)
         if self._sharding is not None:
             xs = jax.device_put(xs, self._sharding)
         ys = jax.block_until_ready(self._batched(xs, jnp.int32(self._off)))
         self._off += n
         self._flushes += 1
+        # ONE device->host copy per output leaf, then numpy slicing — per-item
+        # jax indexing pays a dispatch per item and dominates small batches
+        host = jax.tree.map(np.asarray, ys)
         for i in range(n):
-            self.ff_send_out(jax.tree.map(lambda t: t[i], ys))
+            self.ff_send_out(jax.tree.map(lambda t: t[i], host))
 
     def node_stats(self) -> dict:
         s = super().node_stats()
@@ -912,8 +957,17 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
          a2a_capacity_factor: Optional[float] = None,
          shm_slot_bytes: int = 1 << 16, adaptive: bool = False,
          remote_workers: Optional[Sequence] = None,
-         net_credit: int = 32, transport: Any = None) -> Any:
+         net_credit: int = 32, transport: Any = None,
+         fuse: bool = True) -> Any:
     """Build the runner for a placed graph (stage 4).
+
+    Device placements go through the :mod:`~repro.core.fuse` pass first:
+    every maximal run of adjacent device-placed stages lowers as ONE
+    compiled segment — a single jitted program behind a single
+    :class:`_DeviceStageNode` boundary (hybrid graphs) or a single
+    :class:`~repro.core.graph.DeviceRunner` part (all-device graphs).
+    ``fuse=False`` restores the pre-fusion one-program-per-stage emit (A/B
+    benchmarks, parity tests).
 
     ``transport`` (a :class:`~repro.core.shm.TransportConfig`, or a dict of
     its fields) tunes every shared-memory lane the lowering builds:
@@ -990,7 +1044,8 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
     if targets == {"device"}:
         runner = DeviceRunner(graph, plan, axis=axis,
                               feedback_steps=feedback_steps,
-                              a2a_capacity_factor=a2a_capacity_factor)
+                              a2a_capacity_factor=a2a_capacity_factor,
+                              fuse=fuse)
     elif targets == {"host"}:
         _materialize_widths(graph.root)
         cls = RemoteRunner if has_remote else (
@@ -1006,12 +1061,12 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
         if device_batch is None:
             device_batch = 1 if graph._wrap else 8 * mesh_axis
         new_stages: List[Any] = []
-        run: List[Any] = []
-
-        def close_run() -> None:
-            if not run:
-                return
-            sub = FFGraph(run[0] if len(run) == 1 else PipeG(list(run)))
+        for entry, p in fuse_device_segments(stages, placements,
+                                             enable=fuse):
+            if not isinstance(entry, FusedSegment):
+                new_stages.append(entry)
+                continue
+            sub = entry.subgraph()
             batched, mult = make_device_batched(
                 sub, plan, axis=axis,
                 a2a_capacity_factor=a2a_capacity_factor)
@@ -1020,16 +1075,10 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
             new_stages.append(SeqG(
                 _DeviceStageNode(batched, mult, device_batch,
                                  sharding=sharding,
-                                 label=sub.root.describe())))
-            run.clear()
-
-        for s, p in zip(stages, placements):
-            if p.target == "device":
-                run.append(s)
-            else:
-                close_run()
-                new_stages.append(s)
-        close_run()
+                                 label=entry.describe(),
+                                 jit_key=segment_key(
+                                     sub, device_batch, mult, plan, axis,
+                                     a2a_capacity_factor))))
         _materialize_widths(PipeG(new_stages))
         hg = FFGraph(new_stages[0] if len(new_stages) == 1
                      else PipeG(new_stages))
@@ -1053,8 +1102,13 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
                   shm_slot_bytes: int = 1 << 16,
                   adaptive: bool = False,
                   remote_workers: Optional[Sequence] = None,
-                  net_credit: int = 32, transport: Any = None) -> Any:
+                  net_credit: int = 32, transport: Any = None,
+                  fuse: bool = True) -> Any:
     """Run the staged pipeline: normalize -> annotate -> place -> emit.
+
+    ``fuse=False`` disables the device-segment fusion pass (one compiled
+    program per device stage instead of one per maximal adjacent run) —
+    for A/B benchmarks and fused-vs-unfused parity tests only.
 
     Note: stage-index keys in ``placements=`` refer to the *normalized*
     graph's top-level stages (normalize may collapse/fuse stages); worker
@@ -1102,4 +1156,4 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
                 a2a_capacity_factor=a2a_capacity_factor,
                 shm_slot_bytes=shm_slot_bytes, adaptive=adaptive,
                 remote_workers=remote_workers, net_credit=net_credit,
-                transport=transport)
+                transport=transport, fuse=fuse)

@@ -192,12 +192,14 @@ def a2a_dispatch(left_fns: Sequence[Callable], right_fns: Sequence[Callable],
                  router: Optional[Callable] = None, mesh: Optional[Mesh] = None,
                  axis: str = "data", capacity_factor: Optional[float] = None,
                  interpret: Optional[bool] = None):
-    """Device lowering of ``ff_a2a``: left workers map the batch, then items
-    are dispatched to router-selected right workers ("experts") through
-    capacity-bounded lanes and combined back in stream order — the same
-    dispatch/combine structure as the MoE farm, reusing the
-    ``kernels/router_topk.py`` lane-occupancy kernel (top-1) and
-    :func:`expert_capacity`.
+    """Device lowering of ``ff_a2a``: left workers map the batch, then the
+    whole dispatch/combine hop — route, capacity position, expert compute,
+    combine — runs as ONE fused Pallas kernel
+    (:func:`~repro.kernels.a2a_fused.a2a_fused`, the ``router_topk``
+    lane-occupancy math extended with in-kernel expert compute), sized by
+    :func:`expert_capacity`.  The ``(nR, cap)`` lane buffer the old
+    router-scatter-loop-gather lowering materialized in HBM no longer
+    exists; only the per-expert VMEM cursors remain.
 
     Semantics mirror the host :class:`~repro.core.graph.A2ASkeleton`: item
     ``t`` enters left worker ``t % nL`` (the feeder's round-robin); without a
@@ -213,12 +215,17 @@ def a2a_dispatch(left_fns: Sequence[Callable], right_fns: Sequence[Callable],
     Returns ``batched(xs, t_idx)`` mapping a stacked batch ``(T, ...)`` plus
     absolute stream indices ``(T,)`` to stacked outputs ``(T, ...)``; right
     workers must agree on output shape/dtype.  With a ``mesh``, the left map
-    runs sharded over ``axis`` (the dispatch itself is batch-global).
+    runs sharded over ``axis`` — and in the lossless case the fused
+    dispatch/combine kernel runs sharded too (expert compute where the
+    tokens already live: per-shard lane cursors reproduce the global
+    first-come outcome exactly because nothing can overflow).  A bounded
+    ``capacity_factor`` keeps the dispatch batch-global: first-come lane
+    occupancy across shards needs the one set of cursors.
     """
-    from ..kernels.router_topk import router_topk
+    from ..kernels.a2a_fused import a2a_fused
+    from ..kernels.backend import default_interpret
 
-    if interpret is None:   # real Mosaic kernel on TPU, Python body elsewhere
-        interpret = jax.default_backend() != "tpu"
+    interpret = default_interpret(interpret)
     nL, nR = len(left_fns), len(right_fns)
 
     def left_apply(x, t):
@@ -243,17 +250,20 @@ def a2a_dispatch(left_fns: Sequence[Callable], right_fns: Sequence[Callable],
         cap = T if capacity_factor is None else \
             expert_capacity(T, nR, 1, capacity_factor)
         logits = jax.nn.one_hot(e, nR, dtype=jnp.float32)
-        _w, idx, pos, keep = router_topk(logits, 1, cap, block_t=T,
-                                         interpret=interpret)
-        idx0, pos0, keep0 = idx[:, 0], pos[:, 0], keep[:, 0]
-        # scatter into (nR, cap) lanes; over-capacity items go to a dump slot
-        dest = jnp.where(keep0, idx0 * cap + pos0, nR * cap)
-        flat = jnp.zeros((nR * cap + 1,) + ys.shape[1:], ys.dtype).at[dest].set(ys)
-        lanes = flat[:nR * cap].reshape((nR, cap) + ys.shape[1:])
-        outs = jnp.stack([jax.vmap(right_fns[j])(lanes[j]) for j in range(nR)])
-        out = outs[idx0, pos0]                       # combine in stream order
-        mask = keep0.reshape((T,) + (1,) * (out.ndim - 1))
-        return jnp.where(mask, out, jnp.zeros_like(out))
+        if (mesh is not None and axis_size > 1 and capacity_factor is None
+                and T % axis_size == 0):
+            # sharded expert compute: every shard runs the fused kernel on
+            # its own tokens (capacity is lossless, so per-shard cursors
+            # cannot diverge from the batch-global first-come outcome)
+            out = farm_map(
+                lambda lg, y: a2a_fused(lg, y, right_fns, cap,
+                                        interpret=interpret)[0],
+                mesh, axis=axis, in_specs=(P(axis), P(axis)),
+                out_specs=P(axis))(logits, ys)
+            return out
+        out, _keep = a2a_fused(logits, ys, right_fns, cap,
+                               interpret=interpret)
+        return out
 
     return batched
 

@@ -1,0 +1,173 @@
+"""Device-segment fusion — the pass between ``place`` and ``emit``.
+
+The paper's layered lesson is that composition must collapse into cheap
+communication: a FastFlow pipeline of N stages costs N lock-free hops, not N
+OS handoffs.  Our device tier used to violate the analogous rule — ``emit``
+jitted each device-placed stage as its own program, so a run of N adjacent
+device stages paid N dispatches and N host round-trips per microbatch.  This
+pass restores the invariant: it walks the placed stage list and greedily
+merges every maximal run of adjacent ``device`` placements into one
+:class:`FusedSegment`, which ``emit`` lowers to a single
+``_DeviceStageNode`` (hybrid graphs) or a single ``DeviceRunner`` part
+(all-device graphs) — one ``jax.jit``, one device-put in, one out,
+regardless of how many stages composed into the run.
+
+Inside a segment the existing ``make_device_batched`` composition applies:
+pipelines of pure stages compose into one function, farm and ``ffmap``
+stages fold in as vmapped (mesh: ``shard_map``-ed) bodies, ``all_to_all``
+becomes the fused Pallas dispatch/combine kernel, and ``wrap_around`` tails
+run through ``feedback_scan``.
+
+The module also owns the **jitted-segment cache**: repeated ``compile()``
+calls of the same graph (the adaptive Supervisor re-places and re-emits on
+live stats) used to rebuild ``jax.jit`` wrappers around fresh closures,
+retracing identical programs.  :func:`jit_segment` keys the jitted callable
+by (fused-stage identity, ``device_batch``, axis multiple, mesh, capacity
+factor) so the second compile reuses the traced program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, List, Optional, Sequence, Tuple
+
+from .graph import A2AG, FarmG, FFGraph, MapG, PipeG, SeqG
+
+
+@dataclasses.dataclass
+class FusedSegment:
+    """A maximal run of contiguous device-placed top-level stages, lowered
+    as ONE compiled program."""
+
+    stages: List[Any]
+
+    def describe(self) -> str:
+        return " + ".join(s.describe() for s in self.stages)
+
+    def subgraph(self) -> FFGraph:
+        return FFGraph(self.stages[0] if len(self.stages) == 1
+                       else PipeG(list(self.stages)))
+
+
+def fuse_device_segments(stages: Sequence[Any], placements: Sequence[Any],
+                         enable: bool = True) -> List[Tuple[Any, Any]]:
+    """Group the placed stage list into ``(entry, placement)`` pairs where
+    every maximal run of adjacent ``device`` placements becomes one
+    :class:`FusedSegment` (its placement carries the widest width of the
+    run).  ``enable=False`` degrades to one single-stage segment per device
+    stage — the pre-fusion emit, kept for A/B benchmarks and parity tests."""
+    out: List[Tuple[Any, Any]] = []
+    run: List[Any] = []
+    runp: List[Any] = []
+
+    def close() -> None:
+        if not run:
+            return
+        p = runp[0]
+        if len(run) > 1:
+            p = dataclasses.replace(
+                p, width=max((q.width or 1) for q in runp),
+                reason=f"fused run of {len(run)} device stages; " + p.reason)
+        out.append((FusedSegment(list(run)), p))
+        run.clear()
+        runp.clear()
+
+    for s, p in zip(stages, placements):
+        if getattr(p, "target", "host") == "device":
+            run.append(s)
+            runp.append(p)
+            if not enable:
+                close()
+        else:
+            close()
+            out.append((s, p))
+    close()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Jitted-segment cache
+# ---------------------------------------------------------------------------
+_JIT_CACHE: "OrderedDict[tuple, Any]" = OrderedDict()
+_JIT_CACHE_MAX = 64
+_hits = 0
+_misses = 0
+
+
+def _fingerprint(n: Any) -> Any:
+    """Hashable identity of a device-lowerable IR node: the user callables
+    (hashable by identity) plus the structure around them.  Raises TypeError
+    for anything it cannot fingerprint — callers then skip caching."""
+    if n is None:
+        return None
+    if isinstance(n, FFGraph):
+        return ("graph", _fingerprint(n.root), n._wrap)
+    if isinstance(n, SeqG):
+        return ("seq", n.node, n.pure)
+    if isinstance(n, PipeG):
+        return ("pipe",) + tuple(_fingerprint(s) for s in n.stages)
+    if isinstance(n, FarmG):
+        return ("farm", n.fn, tuple(_fingerprint(w) for w in n.workers),
+                _fingerprint(n.emitter), _fingerprint(n.collector), n.n_auto)
+    if isinstance(n, MapG):
+        return ("map", _fingerprint(n.splitter),
+                tuple(_fingerprint(w) for w in n.workers),
+                _fingerprint(n.composer))
+    if isinstance(n, A2AG):
+        return ("a2a", tuple(_fingerprint(x) for x in n.left),
+                tuple(_fingerprint(x) for x in n.right), n.router)
+    raise TypeError(f"no fingerprint for {type(n).__name__}")
+
+
+def segment_key(sub: Any, device_batch: int, axis_mult: int, plan: Any,
+                axis: str, a2a_capacity_factor: Optional[float] = None,
+                feedback_steps: Optional[int] = None) -> Optional[tuple]:
+    """Cache key for a fused segment's jitted program, or None when any
+    component resists fingerprinting (unhashable callables, odd meshes) —
+    an uncacheable segment just jits fresh, never errors."""
+    try:
+        mesh = getattr(plan, "mesh", None)
+        try:
+            mesh_id: Any = hash(mesh) if mesh is not None else None
+        except TypeError:
+            mesh_id = id(mesh)
+        key = (_fingerprint(sub), int(device_batch), int(axis_mult),
+               mesh_id, axis, a2a_capacity_factor, feedback_steps)
+        hash(key)
+        return key
+    except TypeError:
+        return None
+
+
+def jit_segment(batched: Any, key: Optional[tuple]) -> Any:
+    """``jax.jit(batched)`` with a bounded cross-compile cache: the same
+    fused segment (same key) returns the SAME jitted callable, so its traced
+    programs survive re-``compile()`` of an identical graph."""
+    global _hits, _misses
+    import jax
+    if key is None:
+        return jax.jit(batched)
+    f = _JIT_CACHE.get(key)
+    if f is not None:
+        _JIT_CACHE.move_to_end(key)
+        _hits += 1
+        return f
+    f = jax.jit(batched)
+    _JIT_CACHE[key] = f
+    _misses += 1
+    while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+        _JIT_CACHE.popitem(last=False)
+    return f
+
+
+def segment_cache_info() -> dict:
+    return {"size": len(_JIT_CACHE), "hits": _hits, "misses": _misses,
+            "max": _JIT_CACHE_MAX}
+
+
+def segment_cache_clear() -> None:
+    global _hits, _misses
+    _JIT_CACHE.clear()
+    _hits = 0
+    _misses = 0

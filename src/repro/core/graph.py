@@ -453,7 +453,8 @@ class FFGraph:
                 adaptive: bool = False,
                 remote_workers: Optional[list] = None,
                 net_credit: int = 32,
-                transport: Any = None) -> "Runner":
+                transport: Any = None,
+                fuse: bool = True) -> "Runner":
         """The staged compile pipeline ``normalize -> annotate -> place ->
         emit`` (core/compiler.py):
 
@@ -524,7 +525,8 @@ class FFGraph:
                              adaptive=adaptive,
                              remote_workers=remote_workers,
                              net_credit=net_credit,
-                             transport=transport)
+                             transport=transport,
+                             fuse=fuse)
 
     def lower(self, plan: Any = None, *, capacity: int = 512,
               results_capacity: int = 4096, axis: str = "data") -> "Runner":
@@ -1038,6 +1040,40 @@ def _device_fn(n: Any) -> tuple[Callable, bool]:
         if n.collector is not None:
             fn = _compose(fn, n.collector.node)
         return fn, True
+    if isinstance(n, MapG):
+        # ffmap folds in as a vmapped body: per item, the (pure) splitter
+        # yields the worker parts — a tuple/list of len(workers), or an
+        # array whose leading axis unstacks to one part per worker — each
+        # worker maps its part, and the (pure) composer rebuilds from the
+        # results tuple.  The data-parallel map over *items* then rides the
+        # same farm_map/vmap path as a device farm.
+        parts_fns = []
+        for w in n.workers:
+            f = _pure_of(w)
+            if f is None:
+                raise GraphError("device map lowering needs pure workers")
+            parts_fns.append(f)
+        split_fn = _pure_of(n.splitter)
+        comp_fn = _pure_of(n.composer)
+        if split_fn is None or comp_fn is None:
+            raise GraphError(
+                "device map lowering needs a pure splitter/composer "
+                "(per item: splitter -> len(workers) parts, composer <- "
+                "results tuple); stateful multi-emit splitters are "
+                "host-only")
+
+        def _map_fn(x, _split=split_fn, _comp=comp_fn,
+                    _parts=tuple(parts_fns)):
+            parts = _split(x)
+            if not isinstance(parts, (tuple, list)):
+                parts = tuple(parts[i] for i in range(len(_parts)))
+            if len(parts) != len(_parts):
+                raise GraphError(
+                    f"device map splitter yielded {len(parts)} parts for "
+                    f"{len(_parts)} workers")
+            return _comp(tuple(f(p) for f, p in zip(_parts, parts)))
+
+        return _map_fn, True
     raise GraphError(f"no device lowering for {type(n).__name__} here "
                      "(all_to_all/feedback lower only at the top level of the "
                      "graph via compile(); otherwise use the host path or "
@@ -1054,20 +1090,22 @@ class DeviceRunner(Runner):
     Semantics match :class:`HostRunner` on pure graphs up to output ordering
     (the host farm collector is arrival-ordered).
 
-    Each top-level stage compiles (and is timed) as its own device part, so
-    ``stats()`` reports *per-stage* entries — the same shape every other
-    runner exposes — instead of one aggregate; a ``wrap_around`` graph runs
-    its whole feedback loop as one fused part and reports one entry.  The
-    per-stage split trades cross-stage XLA fusion (plus one host sync per
-    part per batch) for observability on multi-stage all-device graphs;
-    single-stage graphs are unaffected, and the hybrid runner's
-    ``_DeviceStageNode`` segments stay fused as before."""
+    The whole graph compiles as ONE part — a single jitted program per
+    device run (the ``core/fuse.py`` device-segment fusion): N adjacent
+    stages cost one dispatch and one host sync per batch, with all
+    cross-stage XLA fusion intact, and ``stats()`` reports one fused entry
+    whose label lists the composed stages.  ``fuse=False`` restores the
+    one-program-per-stage split (one entry per top-level stage, one jit +
+    one host sync each) — per-stage observability for A/B benchmarks and
+    the adaptive runtime's attribution experiments; a ``wrap_around`` graph
+    always runs its feedback loop as one fused part."""
 
     def __init__(self, graph: FFGraph, plan: Any, axis: str = "data",
                  feedback_steps: Optional[int] = None,
-                 a2a_capacity_factor: Optional[float] = None):
-        import jax
+                 a2a_capacity_factor: Optional[float] = None,
+                 fuse: bool = True):
         from .compiler import _top_stages, make_device_batched
+        from .fuse import jit_segment, segment_key
         self._t0 = self._t1 = 0.0
         self._items = 0
         self._batches = 0
@@ -1075,31 +1113,39 @@ class DeviceRunner(Runner):
         # _parts: [desc, jitted batched(xs, offset), svc_time_ema_s, items]
         self._parts: List[List[Any]] = []
         self._axis_size = 1
-        if graph._wrap:
+
+        def _add_part(sub: FFGraph, desc: str,
+                      steps: Optional[int] = None) -> None:
             batched, mult = make_device_batched(
-                graph, plan, axis=axis, feedback_steps=feedback_steps,
+                sub, plan, axis=axis, feedback_steps=steps,
                 a2a_capacity_factor=a2a_capacity_factor)
-            self._parts.append([graph.describe(), jax.jit(batched), 0.0, 0])
-            self._axis_size = mult
+            key = segment_key(sub, 0, mult, plan, axis,
+                              a2a_capacity_factor, steps)
+            self._parts.append([desc, jit_segment(batched, key), 0.0, 0])
+            self._axis_size = max(self._axis_size, mult)
+
+        if graph._wrap:
+            _add_part(graph, graph.describe(), steps=feedback_steps)
+        elif fuse:
+            stages = _top_stages(graph)
+            _add_part(graph, " + ".join(s.describe() for s in stages))
         else:
             for s in _top_stages(graph):
-                sub = FFGraph(s)
-                batched, mult = make_device_batched(
-                    sub, plan, axis=axis,
-                    a2a_capacity_factor=a2a_capacity_factor)
-                self._parts.append([s.describe(), jax.jit(batched), 0.0, 0])
-                self._axis_size = max(self._axis_size, mult)
+                _add_part(FFGraph(s), s.describe())
 
     def run(self, stream: Sequence) -> List[Any]:
         import jax
         import jax.numpy as jnp
+        import numpy as np
         self._t0 = time.perf_counter()
-        items = [jnp.asarray(x) for x in stream]
+        items = [np.asarray(x) for x in stream]
         if not items:
             return []
         n = len(items)
         pad = (-n) % self._axis_size
-        xs = jnp.stack(items + items[:1] * pad)
+        # stack on the host, then ONE device put for the whole batch
+        # (jnp.asarray canonicalizes dtypes exactly like per-item asarray did)
+        xs = jnp.asarray(np.stack(items + items[:1] * pad))
         offset = jnp.int32(0)
         for part in self._parts:
             t0 = time.perf_counter()
@@ -1114,9 +1160,11 @@ class DeviceRunner(Runner):
         with self._stats_lock:
             self._items += n
             self._batches += 1
-        # unstack the batch axis of every output leaf (a per-item function
-        # may return a pytree, not just one array); padding rows dropped
-        return [jax.tree.map(lambda t: t[i], ys) for i in range(n)]
+        # ONE device->host copy per output leaf, then numpy slicing — per-item
+        # jax indexing would pay a dispatch per item and dominate small runs.
+        # A per-item function may return a pytree; padding rows dropped.
+        host = jax.tree.map(np.asarray, ys)
+        return [jax.tree.map(lambda t: t[i], host) for i in range(n)]
 
     def stats(self) -> dict:
         with self._stats_lock:

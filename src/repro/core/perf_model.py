@@ -188,6 +188,14 @@ class HostCalibration:
     proc_hop_s: float           # per-item process-lane (shm ring) hop cost
     device_dispatch_s: float    # per-microbatch host<->device boundary cost
     net_hop_s: float = 5e-4     # per-item network-lane (TCP frame) hop cost
+    # marginal per-stage cost of one extra stage INSIDE a fused (single-jit)
+    # device segment: what an adjacent device stage pays once core/fuse.py
+    # has merged it into the run, vs. the full device_dispatch_s it would
+    # pay as its own program.  Measured as (t_chain(K) - t_chain(1))/(K-1)
+    # on jitted stage chains; typically ~0 (XLA fuses the bodies), which is
+    # exactly why place() should amortize the one real dispatch across the
+    # whole fused run.
+    fused_segment_s: float = 2e-6
     # per-item cost of the *vectored* process lane (push_many/pop_many
     # amortize the index traffic and the pickling over a batch) — what the
     # batched farm transport actually pays per item
@@ -210,12 +218,13 @@ class HostCalibration:
 # conservative fallbacks, used only until/unless calibrate() has run
 DEFAULT_CALIBRATION = HostCalibration(
     peak_flops=5e10, queue_hop_s=2e-5, proc_hop_s=2e-4,
-    device_dispatch_s=2e-5, net_hop_s=5e-4, shm_batched_hop_s=5e-5,
-    arena_bw_gbs=2.0, source="default")
+    device_dispatch_s=2e-5, net_hop_s=5e-4, fused_segment_s=2e-6,
+    shm_batched_hop_s=5e-5, arena_bw_gbs=2.0, source="default")
 
+# version 4: fused_segment_s (device-segment fusion) + the autotune table;
 # version 3: shm_batched_hop_s + arena_bw_gbs joined (the batched uSPSC
 # transport); version 2 added net_hop_s — older caches must miss cleanly
-_CALIB_VERSION = 3
+_CALIB_VERSION = 4
 _calibration: Optional[HostCalibration] = None
 
 
@@ -498,6 +507,40 @@ def _measure_device_dispatch() -> float:
         return DEFAULT_CALIBRATION.device_dispatch_s
 
 
+def _measure_fused_segment(k: int = 4) -> float:
+    """Marginal per-stage cost inside one jitted device segment: time a
+    ``k``-stage composed chain vs a 1-stage program and divide the extra
+    by ``k - 1``.  Near-zero on every real backend (XLA fuses the bodies) —
+    which is the measured fact that lets ``place`` charge a fused run one
+    dispatch instead of one per stage."""
+    try:
+        import jax
+        import jax.numpy as jnp
+
+        def _chain(n):
+            def f(x):
+                for i in range(n):
+                    x = x * 1.0001 + float(i)
+                return x
+            return jax.jit(f)
+
+        x = jnp.zeros((8,), jnp.float32)
+
+        def _best(f):
+            jax.block_until_ready(f(x))         # compile outside the clock
+            best = float("inf")
+            for _ in range(5):
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(x))
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        t1, tk = _best(_chain(1)), _best(_chain(k))
+        return max((tk - t1) / (k - 1), 1e-9)
+    except Exception:   # noqa: BLE001 - no usable backend: keep the default
+        return DEFAULT_CALIBRATION.fused_segment_s
+
+
 def calibrate(cache: bool = True) -> HostCalibration:
     """Measure the host-tier cost constants on this machine and (optionally)
     persist them, replacing the baked-in defaults ``place`` would otherwise
@@ -515,6 +558,7 @@ def calibrate(cache: bool = True) -> HostCalibration:
         proc_hop_s=_measure_proc_hop(),
         device_dispatch_s=_measure_device_dispatch(),
         net_hop_s=_measure_net_hop(),
+        fused_segment_s=_measure_fused_segment(),
         shm_batched_hop_s=_measure_shm_batched_hop(),
         arena_bw_gbs=_measure_arena_bw(),
         source="measured")
@@ -548,6 +592,7 @@ def _load_cached_calibration() -> Optional[HostCalibration]:
             proc_hop_s=float(d["proc_hop_s"]),
             device_dispatch_s=float(d["device_dispatch_s"]),
             net_hop_s=float(d["net_hop_s"]),
+            fused_segment_s=float(d["fused_segment_s"]),
             shm_batched_hop_s=float(d["shm_batched_hop_s"]),
             arena_bw_gbs=float(d["arena_bw_gbs"]),
             source="cached")
@@ -644,7 +689,9 @@ def reset_observed() -> None:
     _observed = None
 
 
-def _save_observed() -> None:
+def _save_cache_tables(what: str = "observed costs") -> None:
+    """Persist calibration + observed + autotune tables into the one cache
+    file; a read-only location degrades to in-memory with a warning."""
     path = _calib_cache_path()
     c = get_calibration(measure=False)
     try:
@@ -652,12 +699,82 @@ def _save_observed() -> None:
         with open(path, "w") as f:
             json.dump({"version": _CALIB_VERSION,
                        "cpu_count": os.cpu_count(), **c.as_dict(),
-                       "observed": _load_observed()}, f)
+                       "observed": _load_observed(),
+                       "autotune": _load_autotune()}, f)
     except OSError as e:
         warnings.warn(
             f"perf_model: calibration cache {path!r} is not writable ({e}); "
-            "keeping observed costs in memory only",
+            f"keeping {what} in memory only",
             RuntimeWarning, stacklevel=2)
+
+
+def _save_observed() -> None:
+    _save_cache_tables("observed costs")
+
+
+# --------------------------------------------------------------------------
+# Tile autotuning — ``benchmarks/roofline.py --autotune`` winners
+# --------------------------------------------------------------------------
+# The sweep times kernel tile candidates (``block_t`` of the fused a2a hop
+# and the router, ``chunk`` of the SSD scan) per shape on THIS backend and
+# records the winners here, keyed ``"<kernel>:T<T>:E<E>:D<D>"``.  Kernels
+# consult :func:`lookup_autotuned` when called without an explicit tile, so
+# a pre-warmed cache (CI warms it alongside the calibration) changes real
+# dispatch shapes without any pytest worker ever paying for the sweep; an
+# absent record is simply a heuristic default, never a trigger to sweep.
+# The table lives inside the same calibration.json (same REPRO_FF_CACHE
+# resolution, same read-only degradation).
+
+_autotune: Optional[Dict[str, dict]] = None
+
+
+def _load_autotune() -> Dict[str, dict]:
+    global _autotune
+    if _autotune is None:
+        _autotune = {}
+        try:
+            with open(_calib_cache_path()) as f:
+                d = json.load(f)
+            at = d.get("autotune")
+            # unlike the observed table, tile winners do not gate on
+            # cpu_count: they depend on the accelerator backend and shape
+            if isinstance(at, dict) and d.get("version") == _CALIB_VERSION:
+                _autotune = {str(k): dict(v) for k, v in at.items()
+                             if isinstance(v, dict)}
+        except (OSError, ValueError, TypeError):
+            pass
+    return _autotune
+
+
+def lookup_autotuned(key: Optional[str]) -> Optional[dict]:
+    """The autotuned record for a kernel/shape key (e.g.
+    ``"a2a_fused:T256:E4:D64"``), or None — callers fall back to their
+    heuristic tile and never sweep."""
+    if not key:
+        return None
+    rec = _load_autotune().get(key)
+    return dict(rec) if rec else None
+
+
+def record_autotuned(entries: Dict[str, dict], write: bool = True) -> int:
+    """Merge sweep winners into the autotune table; ``write=True`` persists
+    them (with the calibration + observed tables) into the on-disk cache.
+    Returns the number of records absorbed."""
+    table = _load_autotune()
+    n = 0
+    for k, v in entries.items():
+        if isinstance(v, dict):
+            table[str(k)] = dict(v)
+            n += 1
+    if write and n:
+        _save_cache_tables("autotune results")
+    return n
+
+
+def reset_autotuned() -> None:
+    """Drop the in-memory autotune table (tests)."""
+    global _autotune
+    _autotune = None
 
 
 def _stat_records(x, out: list) -> None:

@@ -1,0 +1,138 @@
+"""Fused all-to-all dispatch/combine — one Pallas kernel for the whole hop.
+
+``core.device.a2a_dispatch`` used to lower ``ff_a2a`` as four separate XLA
+programs per batch: ``router_topk`` for the capacity positions, a scatter
+into ``(nR, cap)`` expert lanes, a per-expert compute loop, and a gather to
+combine back in stream order.  This kernel fuses the entire hop into a
+single ``pallas_call``: route (softmax + top-1), capacity position, expert
+compute, and combine all happen per token block while the activations are
+hot, and the ``(nR, cap)`` lane buffer is never materialized in HBM.
+
+The per-expert counters live in int32 VMEM scratch and carry across token
+blocks (the grid's sequential dimension) — they ARE the bounded SPSC lanes
+of FastFlow's all-to-all, reduced to their essence: each counter is a lane's
+write cursor, monotonically claimed first-come-first-served as tokens
+stream past, and a token finding its cursor at ``capacity`` is the
+synchronous SPMD rendering of a blocked push (the host runtime would
+back-pressure; a fixed-shape device program must drop and zero-fill).  The
+lane *storage* disappears entirely: because every expert's output for a
+token can be computed where the token already sits, "enqueue into the lane,
+service it, collect" collapses into "compute and select", and only the
+cursor — the one piece of state the queue semantics actually need — remains
+in VMEM.
+
+Combine is pure selection (top-1's normalized weight is identically 1.0),
+so outputs are bit-identical to applying the routed expert directly under
+the same jit — ``kernels/ref.a2a_fused_ref`` asserts exactly that (jitted:
+eager mode rounds multiply-add chains without FMA contraction, a 1-ulp
+eager-mode artifact, and production segments are always jitted) — and
+``interpret`` is
+resolved through :mod:`kernels.backend` so the CPU CI verifies the same
+kernel body that lowers to Mosaic on a TPU host.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backend import default_interpret
+
+
+def _kernel(logits_ref, xs_ref, out_ref, keep_ref, counts_ref, *,
+            fns, E, capacity, bt, in_shape, out_shape):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    # -- route: softmax + top-1 (the router_topk math, K=1) -----------------
+    logits = logits_ref[...].astype(jnp.float32)          # (bt, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(probs, axis=-1).astype(jnp.int32)    # (bt,)
+
+    # -- capacity position: running VMEM lane cursors + rank in this block --
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # (bt, E)
+    within = jnp.cumsum(onehot, axis=0) - onehot          # exclusive rank
+    base = counts_ref[...]                                # (E,)
+    pos = jnp.sum((within + base[None, :]) * onehot, axis=-1)
+    keep = pos < capacity                                 # (bt,)
+
+    # -- expert compute + combine, in-register ------------------------------
+    xs = xs_ref[...].reshape((bt,) + in_shape)
+    sel = jnp.zeros((bt,) + out_shape[1:], out_ref.dtype)
+    for j, fn in enumerate(fns):
+        yj = jax.vmap(fn)(xs).reshape((bt,) + out_shape[1:])
+        sel = jnp.where((idx == j).reshape((bt,) + (1,) * (sel.ndim - 1)),
+                        yj, sel)
+    mask = keep.reshape((bt,) + (1,) * (sel.ndim - 1))
+    out_ref[...] = jnp.where(mask, sel, jnp.zeros_like(sel))
+    keep_ref[...] = keep.reshape(bt, 1)
+    counts_ref[...] = base + jnp.sum(onehot, axis=0)
+
+
+def _pick_block(T: int, block_t: Optional[int], E: int, Din: int) -> int:
+    """Requested block, else the autotuned winner for this shape, else a
+    heuristic — always snapped down to a divisor of T."""
+    if block_t is None:
+        try:  # lazy: kernels must stay importable without the core package
+            from ..core import perf_model as pm
+            rec = pm.lookup_autotuned(f"a2a_fused:T{T}:E{E}:D{Din}")
+            if rec:
+                block_t = int(rec["block_t"])
+        except Exception:   # noqa: BLE001 - tuning is advisory, never fatal
+            block_t = None
+    if block_t is None:
+        block_t = 128
+    bt = max(1, min(block_t, T))
+    while T % bt:
+        bt -= 1
+    return bt
+
+
+def a2a_fused(logits, xs, expert_fns: Sequence[Callable], capacity: int, *,
+              block_t: Optional[int] = None,
+              interpret: Optional[bool] = None):
+    """logits: (T, E); xs: (T, *item) already left-mapped items;
+    ``expert_fns`` the E right workers (pure, array-in/array-out, agreeing
+    on output shape/dtype).  Returns ``(out (T, *expert_out), keep (T,))``
+    with over-capacity tokens zero-filled and ``keep=False``."""
+    T, E = logits.shape
+    if len(expert_fns) != E:
+        raise ValueError(f"logits width {E} != {len(expert_fns)} experts")
+    in_shape = xs.shape[1:]
+    Din = int(math.prod(in_shape)) if in_shape else 1
+    item = jax.ShapeDtypeStruct(in_shape, xs.dtype)
+    outs = [jax.eval_shape(fn, item) for fn in expert_fns]
+    if any(o.shape != outs[0].shape or o.dtype != outs[0].dtype
+           for o in outs[1:]):
+        raise ValueError("a2a experts must agree on output shape/dtype: "
+                         f"{[(o.shape, str(o.dtype)) for o in outs]}")
+    per_out = outs[0]
+    Dout = int(math.prod(per_out.shape)) if per_out.shape else 1
+    bt = _pick_block(T, block_t, E, Din)
+    nt = T // bt
+
+    kernel = functools.partial(
+        _kernel, fns=tuple(expert_fns), E=E, capacity=capacity, bt=bt,
+        in_shape=in_shape, out_shape=(bt, Dout))
+    out, keep = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0)),
+                  pl.BlockSpec((bt, Din), lambda t: (t, 0))],
+        out_specs=[pl.BlockSpec((bt, Dout), lambda t: (t, 0)),
+                   pl.BlockSpec((bt, 1), lambda t: (t, 0))],
+        out_shape=[jax.ShapeDtypeStruct((T, Dout), per_out.dtype),
+                   jax.ShapeDtypeStruct((T, 1), jnp.bool_)],
+        scratch_shapes=[pltpu.VMEM((E,), jnp.int32)],
+        interpret=default_interpret(interpret),
+    )(logits, xs.reshape(T, Din))
+    return out.reshape((T,) + per_out.shape), keep[:, 0]

@@ -1,0 +1,29 @@
+"""One backend-detection helper for every Pallas call site.
+
+Before this module each kernel carried its own notion of "am I on a TPU":
+``ops.py`` had a private ``_on_tpu()``, while ``router_topk.py`` and
+``flash_attention.py`` defaulted ``interpret=True`` unconditionally — correct
+on the CPU CI container, silently interpreted (100x slow) on a real TPU host.
+Every ``pallas_call`` now resolves its ``interpret`` flag through
+:func:`default_interpret` so the kernels compile to Mosaic exactly when a TPU
+backend is present and fall back to the Python interpreter everywhere else.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a real TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a ``pallas_call`` ``interpret`` flag: an explicit value wins,
+    ``None`` means "interpret everywhere except on a TPU"."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)

@@ -20,11 +20,14 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .backend import default_interpret
 
 NEG_INF = -1.0e38
 
@@ -78,10 +81,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """q: (B,H,Sq,D); k,v: (B,Hkv,Sk,D), Hkv | H.  Returns (B,H,Sq,D).
     Queries are aligned to the END of the key sequence (self-attention when
-    Sq == Sk; incremental/chunked prefill when Sq < Sk)."""
+    Sq == Sk; incremental/chunked prefill when Sq < Sk).  ``interpret=None``
+    resolves via :mod:`kernels.backend` (Mosaic on TPU)."""
+    interpret = default_interpret(interpret)
     B, H, Sq, D = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     group = H // Hkv

@@ -15,13 +15,13 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .backend import on_tpu as _on_tpu  # noqa: F401 - re-exported; the
+# kernels' own interpret=None defaults resolve through kernels.backend, so
+# the explicit interpret= threading below is belt-and-braces documentation
+# of the contract: Mosaic on TPU, Python interpreter elsewhere.
 from .flash_attention import flash_attention as _flash_fwd
 from .router_topk import router_topk as _router_fwd
 from .ssd_scan import ssd_scan as _ssd_fwd
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 # -- flash attention -----------------------------------------------------------

@@ -59,6 +59,27 @@ def ssd_scan_ref(q, k, v, log_a):
     return jnp.moveaxis(ys, 0, 2).astype(q.dtype)   # (B,H,S,P)
 
 
+def a2a_fused_ref(logits, xs, expert_fns, capacity: int):
+    """Naive oracle for the fused all-to-all hop: top-1 route per token,
+    first-come capacity position, routed expert applied directly, dropped
+    tokens zero-filled.  logits: (T, E); xs: (T, *item).  Returns
+    ``(out, keep)`` — the kernel must match bit-for-bit (combine is pure
+    selection, never arithmetic)."""
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    idx = jnp.argmax(probs, axis=-1).astype(jnp.int32)          # (T,)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1     # FCFS rank
+    keep = pos < capacity
+    outs = jnp.stack([jax.vmap(fn)(xs) for fn in expert_fns])   # (E, T, ...)
+    out = outs[0]
+    for j in range(1, E):
+        sel = (idx == j).reshape((T,) + (1,) * (out.ndim - 1))
+        out = jnp.where(sel, outs[j], out)
+    mask = keep.reshape((T,) + (1,) * (out.ndim - 1))
+    return jnp.where(mask, out, jnp.zeros_like(out)), keep
+
+
 def router_topk_ref(logits, top_k: int, capacity: int):
     """Top-k routing with capacity-bounded positions (first-come order).
     logits: (T, E) fp32.  Returns (weights (T,K), experts (T,K),

@@ -11,11 +11,14 @@ exactly like the bounded SPSC queue it models.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .backend import default_interpret
 
 NEG_INF = -1.0e38
 
@@ -62,9 +65,11 @@ def _kernel(logits_ref, w_ref, idx_ref, pos_ref, keep_ref, counts_ref, *,
 
 
 def router_topk(logits, top_k: int, capacity: int, *, block_t: int = 256,
-                interpret: bool = True):
+                interpret: Optional[bool] = None):
     """logits: (T, E) -> (weights (T,K) f32, experts (T,K) i32,
-    positions (T,K) i32, keep (T,K) bool)."""
+    positions (T,K) i32, keep (T,K) bool).  ``interpret=None`` resolves via
+    :mod:`kernels.backend`: Mosaic on TPU, Python interpreter elsewhere."""
+    interpret = default_interpret(interpret)
     T, E = logits.shape
     bt = min(block_t, T)
     assert T % bt == 0, (T, bt)

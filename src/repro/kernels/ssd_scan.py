@@ -13,11 +13,14 @@ models/ssm.chunked_gla; the oracle is kernels/ref.ssd_scan_ref.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .backend import default_interpret
 
 
 def _kernel(q_ref, k_ref, v_ref, la_ref, y_ref, state_ref, *, Q):
@@ -56,8 +59,11 @@ def _kernel(q_ref, k_ref, v_ref, la_ref, y_ref, state_ref, *, Q):
     state_ref[...] = jnp.exp(jnp.clip(tot, -60.0, 0.0)) * h_in + inc
 
 
-def ssd_scan(q, k, v, log_a, *, chunk: int = 128, interpret: bool = True):
-    """q,k: (B,H,S,N); v: (B,H,S,P); log_a: (B,H,S) -> y (B,H,S,P)."""
+def ssd_scan(q, k, v, log_a, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    """q,k: (B,H,S,N); v: (B,H,S,P); log_a: (B,H,S) -> y (B,H,S,P).
+    ``interpret=None`` resolves via :mod:`kernels.backend` (Mosaic on TPU)."""
+    interpret = default_interpret(interpret)
     B, H, S, N = q.shape
     P = v.shape[-1]
     Q = min(chunk, S)

@@ -9,6 +9,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.ops import flash_attention, router_topk, ssd_scan
 
+pytestmark = pytest.mark.kernels
+
 
 def _rnd(key, *shape, dtype=jnp.float32, scale=1.0):
     return (jax.random.normal(key, shape) * scale).astype(dtype)

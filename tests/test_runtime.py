@@ -145,19 +145,27 @@ def test_stage_handles_uniform_across_runners(plan):
     rp.run()
     hp = rp.stage_handles()
     assert any(h.stats().get("backend") == "process" for h in hp)
-    # device tier: per-stage entries instead of one aggregate
+    # device tier: the fused segment is ONE entry whose label lists the
+    # composed stages; fuse=False restores the per-stage split
     rd = pipeline(seq(lambda x: x + 1.0, pure=True),
                   seq(lambda x: x * 2.0, pure=True)).compile(
         plan, mode="device")
     out = rd.run([1.0, 2.0, 3.0])
     assert [float(y) for y in out] == [4.0, 6.0, 8.0]
     st = rd.stats()
-    assert len(st["stages"]) == 2
+    assert len(st["stages"]) == 1
+    assert " + " in st["stages"][0]["node"]
     assert all(s["items"] == 3 for s in st["stages"])
     hd = rd.stage_handles()
-    assert len(hd) == 2
+    assert len(hd) == 1
     assert all(h.stats()["backend"] == "device" for h in hd)
     assert all(not h.reconfigurable for h in hd)
+    rs = pipeline(seq(lambda x: x + 1.0, pure=True),
+                  seq(lambda x: x * 2.0, pure=True)).compile(
+        plan, mode="device", fuse=False)
+    rs.run([1.0, 2.0, 3.0])
+    assert len(rs.stats()["stages"]) == 2
+    assert len(rs.stage_handles()) == 2
 
 
 def test_non_reconfigurable_handle_refuses():
