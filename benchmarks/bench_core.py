@@ -24,11 +24,19 @@ plain-vs-supervised ratio).  ``bench_net_hop`` measures the distributed
 tier's channel: loopback ``NetLane`` round-trip to a worker pool
 (``net_rtt_us``) and pipelined credit-window streaming throughput.
 
+``bench_serving`` (benchmarks/bench_serving.py) replays an open-loop
+Poisson arrival process against the continuous-batching serving engine at
+2x its measured capacity: p50/p99 submit->finish latency of admitted
+requests (``latency_ms``, ``latency_p99_ms``), ``goodput_items_per_s``,
+and the typed-``Overloaded`` shed count — the SLO tier's bound-the-tail
+claim, measured where closed-loop clients would hide it.
+
 The ``--smoke`` JSON artifact carries machine-readable ``items_per_s`` /
-``ratio_best`` / ``reconfig_latency_ms`` / ``net_rtt_us`` fields per
-metric; CI's bench-compare step fails the build when throughput regresses
->30% or a latency metric grows past its (generous, machine-normalized)
-bound against the committed ``benchmarks/BENCH_baseline.json`` (see
+``ratio_best`` / ``reconfig_latency_ms`` / ``net_rtt_us`` /
+``latency_ms`` / ``goodput_items_per_s`` fields per metric; CI's
+bench-compare step fails the build when throughput regresses >30% or a
+latency metric grows past its (generous, machine-normalized) bound
+against the committed ``benchmarks/BENCH_baseline.json`` (see
 ``tools/bench_compare.py``).
 """
 
@@ -713,6 +721,13 @@ def bench_adaptive(smoke: bool = False):
     ]
 
 
+def _bench_serving(smoke: bool):
+    # open-loop Poisson replay against the serving engine: p50/p99 latency
+    # of admitted requests + goodput under 2x overload (bench_serving.py)
+    from bench_serving import bench_serving
+    return bench_serving(smoke)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -729,7 +744,8 @@ def main() -> None:
                lambda: bench_shm_transport(args.smoke),
                lambda: bench_net_hop(args.smoke),
                lambda: bench_device_fusion(args.smoke),
-               lambda: bench_adaptive(args.smoke)]
+               lambda: bench_adaptive(args.smoke),
+               lambda: _bench_serving(args.smoke)]
     if not args.smoke:
         benches += [bench_spsc_queue, bench_farm_speedup,
                     bench_pipeline_service_time, bench_accelerator_offload]

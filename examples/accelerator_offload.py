@@ -4,8 +4,10 @@ as the accelerator, two ways:
 1. raw JaxAccelerator: offload f(x) tasks (here: batched matmuls) and
    retrieve results asynchronously — the paper's offload/load_result
    pattern verbatim, with JAX async dispatch as the lock-free queue;
-2. InferenceEngine: continuous-batching LM serving behind the same
-   offload/load_result API (requests in, generated sequences out).
+2. InferenceEngine: continuous-batching LM serving behind the typed
+   client API — ``submit`` returns a ``RequestHandle``, ``results()``
+   iterates outcomes, the engine is a context manager (the paper's
+   offload/load_result surface remains available for compat).
 
     PYTHONPATH=src python examples/accelerator_offload.py
 """
@@ -54,23 +56,21 @@ def demo_serving():
     cfg = get("ff-tiny").reduced()
     plan = single_device_plan()
     params = init_state(cfg, plan, jax.random.PRNGKey(0))["params"]
-    eng = InferenceEngine(cfg, plan, params, max_batch=2, cache_len=64)
-    eng.run_then_freeze()
     rng = np.random.default_rng(0)
-    for i in range(5):
-        eng.offload(Request(prompt=rng.integers(0, cfg.vocab, 8,
-                                                dtype=np.int32),
-                            max_new_tokens=8, id=i))
-    eng.offload(FF_EOS)
+    with InferenceEngine(cfg, plan, params, max_batch=2,
+                         cache_len=64) as eng:
+        for _ in range(5):
+            eng.submit(Request(prompt=rng.integers(0, cfg.vocab, 8,
+                                                   dtype=np.int32),
+                               max_new_tokens=8))
+    # leaving the with-block drained the engine; outcomes replay in
+    # completion order
     done = 0
-    while True:
-        ok, req = eng.load_result()
-        if not ok:
-            break
+    for req in eng.results():
         done += 1
         print(f"request {req.id}: {len(req.tokens)} tokens "
+              f"[{req.finish_reason}] "
               f"({(req.finish_t-req.submit_t)*1e3:.0f} ms) {req.tokens[:8]}")
-    eng.wait()
     assert done == 5
     print(f"engine decode steps: {eng.steps} (continuous batching: "
           f"fewer than sequential 5x8={5*8})")

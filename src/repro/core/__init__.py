@@ -92,8 +92,14 @@ capacity position, expert compute, and stream-order combine in a single
 ``pallas_call``, per-expert lane cursors in VMEM scratch, ``expert_capacity``
 sizing the lanes, and the kernel itself sharded over the mesh in the
 lossless case), and ``wrap_around`` lowers through
-``core.device.feedback_scan`` when ``compile(feedback_steps=K)`` bounds the
-loop.  ``lower(plan)`` stays as a thin compat wrapper forcing all-host
+``core.device.feedback_scan`` when ``feedback_steps=K`` bounds the loop or
+through ``core.device.feedback_while`` (a masked, vmap-safe
+``lax.while_loop``) when ``feedback_cond=`` gives a data-dependent exit
+predicate.  All compile knobs consolidate into one
+:class:`~repro.core.compiler.CompileConfig` dataclass —
+``graph.compile(config=CompileConfig(...))`` is the supported surface, and
+the legacy flat kwargs remain as a one-``DeprecationWarning`` shim.
+``lower(plan)`` stays as a thin compat wrapper forcing all-host
 (``plan=None``) or all-device placement.  The data pipeline, the serving
 engine, and the launch entry points are all expressed as FFGraph programs
 compiled through this pipeline.
@@ -154,10 +160,11 @@ from .graph import HostRunner, DeviceRunner
 from .process import ProcessA2ANode, ProcessFarmNode, WorkerCrashed
 from .net import (NetLane, RemoteFarmNode, RemoteStageHandle,
                   spawn_loopback_pool, worker_main)
-from .compiler import (CostEstimate, HybridRunner, Placement, ProcessRunner,
-                       RemoteRunner, annotate, compile_graph, emit, place)
+from .compiler import (CompileConfig, CostEstimate, HybridRunner, Placement,
+                       ProcessRunner, RemoteRunner, annotate, compile_graph,
+                       emit, place)
 from .runtime import (AdaptiveFarmNode, AdaptiveStageHandle,
-                      ReplacementEvent, Supervisor)
+                      ReplacementEvent, SLOPolicy, Supervisor)
 from .accelerator import JaxAccelerator
 from .plan import DEFAULT_RULES, ShardingPlan, single_device_plan
 from . import device, perf_model
@@ -177,10 +184,10 @@ __all__ = [
     "NetLane", "RemoteFarmNode", "RemoteStageHandle", "RemoteRunner",
     "spawn_loopback_pool", "worker_main",
     "AdaptiveFarmNode", "AdaptiveStageHandle", "ReplacementEvent",
-    "Supervisor",
+    "SLOPolicy", "Supervisor",
     "seq", "pipeline", "farm", "ffmap", "all_to_all",
-    "CostEstimate", "Placement", "annotate", "place", "emit",
-    "compile_graph",
+    "CompileConfig", "CostEstimate", "Placement", "annotate", "place",
+    "emit", "compile_graph",
     "JaxAccelerator", "ShardingPlan", "single_device_plan", "DEFAULT_RULES",
     "device", "perf_model",
 ]

@@ -82,6 +82,44 @@ _TARGETS = ("host", "host_process", "host_remote", "device")
 
 
 @dataclasses.dataclass
+class CompileConfig:
+    """Every compile-time knob of the staged pipeline in one value.
+
+    ``FFGraph.compile(config=CompileConfig(...))`` is the supported spelling;
+    the old flat kwargs (``compile(plan, mode=..., capacity=...)``) remain as
+    a deprecated shim that builds this dataclass and warns once per call.
+    Field semantics are unchanged from the old kwargs — see
+    :func:`compile_graph` for the full story per knob.  The one new field is
+    ``feedback_cond``: a per-item predicate ``cond(state) -> bool`` that lets
+    a ``wrap_around`` graph terminate data-dependently — on host the runner
+    evaluates it on every item coming off the feedback edge (deliver when
+    false), on device the loop lowers through
+    :func:`~repro.core.device.feedback_while` (``jax.lax.while_loop``)
+    instead of the fixed-turn ``feedback_scan``; ``feedback_steps`` then acts
+    as an optional safety cap on the turn count."""
+
+    plan: Any = None
+    mode: str = "auto"
+    costs: Optional[Dict] = None
+    sample: Any = None
+    placements: Optional[Dict] = None
+    capacity: int = 512
+    results_capacity: int = 4096
+    axis: str = "data"
+    feedback_steps: Optional[int] = None
+    feedback_cond: Optional[Callable] = None
+    device_batch: Optional[int] = None
+    a2a_capacity_factor: Optional[float] = None
+    normalize: bool = True
+    shm_slot_bytes: int = 1 << 16
+    adaptive: bool = False
+    remote_workers: Optional[Sequence] = None
+    net_credit: int = 32
+    transport: Any = None
+    fuse: bool = True
+
+
+@dataclasses.dataclass
 class CostEstimate:
     """Per-node cost, in host-seconds per item plus declared work terms.
 
@@ -397,7 +435,7 @@ def _mesh_axis_size(plan: Any, axis: str) -> int:
 
 def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
           axis: str = "data", feedback_steps: Optional[int] = None,
-          mode: str = "auto",
+          feedback_cond: Optional[Callable] = None, mode: str = "auto",
           remote_pool: Optional[Sequence] = None) -> FFGraph:
     """Assign each top-level stage a :class:`Placement` (in place).
 
@@ -452,9 +490,11 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
         return None
 
     # a feedback graph runs its loop through one target: device only when
-    # the whole graph lowers there and a turn count was given
+    # the whole graph lowers there and the loop is bounded — by a turn
+    # count (feedback_scan) or an exit predicate (feedback_while)
     wrap_device_ok = (graph._wrap and plan is not None
-                      and feedback_steps is not None
+                      and (feedback_steps is not None
+                           or feedback_cond is not None)
                       and not any(isinstance(s, A2AG) for s in stages)
                       and all(_device_eligible(s) for s in stages))
 
@@ -657,6 +697,7 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
 # ---------------------------------------------------------------------------
 def make_device_batched(graph: FFGraph, plan: Any, axis: str = "data",
                         feedback_steps: Optional[int] = None,
+                        feedback_cond: Optional[Callable] = None,
                         a2a_capacity_factor: Optional[float] = None,
                         ) -> Tuple[Callable, int]:
     """Build the batch-level device function for a graph (or subgraph).
@@ -680,17 +721,29 @@ def make_device_batched(graph: FFGraph, plan: Any, axis: str = "data",
     mesh_axis = _mesh_axis_size(plan, axis)
 
     if graph._wrap:
-        if feedback_steps is None:
+        if feedback_steps is None and feedback_cond is None:
             raise GraphError(
-                "device feedback needs a turn count: pass feedback_steps=K "
-                "to compile() (lowers through core.device.feedback_scan), "
-                "or use the host path / feedback_scan directly")
+                "device feedback needs a bound: pass feedback_steps=K "
+                "(lowers through core.device.feedback_scan) or "
+                "feedback_cond=pred (lowers through "
+                "core.device.feedback_while) to compile(), or use the host "
+                "path / feedback_scan directly")
         fn, uses_farm = _device_fn(graph.root)
 
-        def item_fn(x):
-            final, _ = dev.feedback_scan(lambda s: (fn(s), 0.0), x,
-                                         feedback_steps, collect=False)
-            return final
+        if feedback_cond is not None:
+            # data-dependent turn count: lax.while_loop, vmap-safe (each
+            # lane freezes once its own cond goes false), with
+            # feedback_steps as an optional hard cap
+            def item_fn(x):
+                final, _ = dev.feedback_while(
+                    lambda s: (fn(s), 0.0), x, feedback_cond,
+                    max_steps=feedback_steps)
+                return final
+        else:
+            def item_fn(x):
+                final, _ = dev.feedback_scan(lambda s: (fn(s), 0.0), x,
+                                             feedback_steps, collect=False)
+                return final
 
         if uses_farm:
             inner = dev.farm_map(lambda xs: jax.vmap(item_fn)(xs),
@@ -953,6 +1006,7 @@ def _materialize_widths(n: Any) -> None:
 def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
          results_capacity: int = 4096, axis: str = "data",
          feedback_steps: Optional[int] = None,
+         feedback_cond: Optional[Callable] = None,
          device_batch: Optional[int] = None,
          a2a_capacity_factor: Optional[float] = None,
          shm_slot_bytes: int = 1 << 16, adaptive: bool = False,
@@ -1044,6 +1098,7 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
     if targets == {"device"}:
         runner = DeviceRunner(graph, plan, axis=axis,
                               feedback_steps=feedback_steps,
+                              feedback_cond=feedback_cond,
                               a2a_capacity_factor=a2a_capacity_factor,
                               fuse=fuse)
     elif targets == {"host"}:
@@ -1051,7 +1106,8 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
         cls = RemoteRunner if has_remote else (
             ProcessRunner if (has_process or adaptive_proc) else HostRunner)
         runner = cls(graph, capacity=capacity,
-                     results_capacity=results_capacity)
+                     results_capacity=results_capacity,
+                     feedback_cond=feedback_cond)
     else:
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -1084,7 +1140,8 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
                      else PipeG(new_stages))
         hg._wrap = graph._wrap
         runner = HybridRunner(hg, capacity=capacity,
-                              results_capacity=results_capacity)
+                              results_capacity=results_capacity,
+                              feedback_cond=feedback_cond)
     runner.placements = report
     return runner
 
@@ -1092,19 +1149,16 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
 # ---------------------------------------------------------------------------
 # The pipeline driver
 # ---------------------------------------------------------------------------
-def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
-                  normalize: bool = True, costs: Optional[Dict] = None,
-                  sample: Any = None, placements: Optional[Dict] = None,
-                  capacity: int = 512, results_capacity: int = 4096,
-                  axis: str = "data", feedback_steps: Optional[int] = None,
-                  device_batch: Optional[int] = None,
-                  a2a_capacity_factor: Optional[float] = None,
-                  shm_slot_bytes: int = 1 << 16,
-                  adaptive: bool = False,
-                  remote_workers: Optional[Sequence] = None,
-                  net_credit: int = 32, transport: Any = None,
-                  fuse: bool = True) -> Any:
+def compile_graph(graph: FFGraph, plan: Any = None, *,
+                  config: Optional[CompileConfig] = None,
+                  **kwargs: Any) -> Any:
     """Run the staged pipeline: normalize -> annotate -> place -> emit.
+
+    All knobs live on :class:`CompileConfig`; ``compile_graph(g, config=c)``
+    is the canonical call.  The flat spelling ``compile_graph(g, plan,
+    mode=..., capacity=...)`` still works — the kwargs are folded into a
+    config (unknown names raise ``TypeError``) — but mixing ``config=`` with
+    a positional plan or extra kwargs is an error.
 
     ``fuse=False`` disables the device-segment fusion pass (one compiled
     program per device stage instead of one per maximal adjacent run) —
@@ -1134,26 +1188,48 @@ def compile_graph(graph: FFGraph, plan: Any = None, *, mode: str = "auto",
     its fields) tunes every shared-memory lane of the process tier — ring
     depths, slot size, arena size, bounded-vs-uSPSC, batch flush policy;
     see :func:`emit` for the knobs and their defaults.  It supersedes the
-    legacy ``shm_slot_bytes=`` when both are given."""
-    if mode not in ("auto", "host", "process", "remote", "device"):
-        raise GraphError(f"unknown compile mode {mode!r}")
-    if mode == "device" and plan is None:
+    legacy ``shm_slot_bytes=`` when both are given.
+
+    ``feedback_cond=pred`` makes a ``wrap_around`` loop data-dependent:
+    on host the runner evaluates ``pred(item)`` on every item coming off
+    the feedback edge and delivers it when false; on device the loop
+    lowers through :func:`~repro.core.device.feedback_while`
+    (``lax.while_loop``) with ``feedback_steps`` as an optional turn cap."""
+    if config is not None:
+        if plan is not None or kwargs:
+            raise GraphError("compile_graph(config=...) does not combine "
+                             "with a positional plan or extra kwargs — put "
+                             "everything on the CompileConfig")
+        cfg = config
+    else:
+        try:
+            cfg = CompileConfig(plan=plan, **kwargs)
+        except TypeError as e:
+            raise TypeError(f"compile_graph(): {e}; see CompileConfig for "
+                            "the supported knobs") from None
+    if cfg.mode not in ("auto", "host", "process", "remote", "device"):
+        raise GraphError(f"unknown compile mode {cfg.mode!r}")
+    if cfg.mode == "device" and cfg.plan is None:
         raise GraphError("compile(mode=\"device\") needs a ShardingPlan")
-    if mode == "remote" and not remote_workers:
+    if cfg.mode == "remote" and not cfg.remote_workers:
         raise GraphError("compile(mode=\"remote\") needs remote_workers="
                          "[\"host:port\", ...]")
-    g = graph.optimize() if normalize else graph
+    g = graph.optimize() if cfg.normalize else graph
     # forced modes still need costs for width selection (n="auto" farms),
     # so annotate runs whenever the caller supplied cost information
-    if mode == "auto" or costs or sample is not None:
-        annotate(g, costs=costs, sample=sample)
-    place(g, plan, overrides=placements, axis=axis,
-          feedback_steps=feedback_steps, mode=mode,
-          remote_pool=remote_workers)
-    return emit(g, plan, capacity=capacity,
-                results_capacity=results_capacity, axis=axis,
-                feedback_steps=feedback_steps, device_batch=device_batch,
-                a2a_capacity_factor=a2a_capacity_factor,
-                shm_slot_bytes=shm_slot_bytes, adaptive=adaptive,
-                remote_workers=remote_workers, net_credit=net_credit,
-                transport=transport, fuse=fuse)
+    if cfg.mode == "auto" or cfg.costs or cfg.sample is not None:
+        annotate(g, costs=cfg.costs, sample=cfg.sample)
+    place(g, cfg.plan, overrides=cfg.placements, axis=cfg.axis,
+          feedback_steps=cfg.feedback_steps,
+          feedback_cond=cfg.feedback_cond, mode=cfg.mode,
+          remote_pool=cfg.remote_workers)
+    return emit(g, cfg.plan, capacity=cfg.capacity,
+                results_capacity=cfg.results_capacity, axis=cfg.axis,
+                feedback_steps=cfg.feedback_steps,
+                feedback_cond=cfg.feedback_cond,
+                device_batch=cfg.device_batch,
+                a2a_capacity_factor=cfg.a2a_capacity_factor,
+                shm_slot_bytes=cfg.shm_slot_bytes, adaptive=cfg.adaptive,
+                remote_workers=cfg.remote_workers,
+                net_credit=cfg.net_credit,
+                transport=cfg.transport, fuse=cfg.fuse)

@@ -14,7 +14,9 @@ pipeline            ``pipeline_shard`` — stages on a mesh axis, microbatches
 farm+collector      ``flash_decode_combine`` — partial-softmax workers +
                     logsumexp-combining collector for sharded-KV decode
 feedback            ``feedback_scan`` — wrap_around as lax.scan carrying the
-                    stream back (decode loop, divide&conquer)
+                    stream back (decode loop, divide&conquer);
+                    ``feedback_while`` — the data-dependent variant as
+                    lax.while_loop (per-item early exit, FastBERT-style)
 ==================  ==========================================================
 """
 
@@ -183,6 +185,41 @@ def feedback_scan(step_fn: Callable, init_state, n_steps: int,
         return state, (emit if collect else None)
 
     return lax.scan(body, init_state, None, length=n_steps)
+
+
+def feedback_while(step_fn: Callable, init_state, cond_fn: Callable,
+                   max_steps: Optional[int] = None):
+    """Data-dependent feedback channel: ``do {state = step(state)} while
+    (cond(state))`` as a ``lax.while_loop`` — the device lowering of a
+    ``wrap_around`` loop whose exit is decided per item per turn
+    (``compile(feedback_cond=...)``), e.g. FastBERT-style confidence exit.
+
+    The step always runs at least once, matching the host path where an
+    item traverses the loop body before the runner evaluates the predicate
+    on the feedback edge.  ``max_steps`` optionally caps the turn count
+    (``feedback_steps`` riding along as a safety bound).
+
+    vmap-safe by construction: under ``jax.vmap`` the batched loop keeps
+    iterating until every lane's predicate is false, but a finished lane's
+    state is frozen by the ``active`` mask — extra turns cannot corrupt it.
+    ``step_fn(state) -> (state, emit)`` (emit discarded, as in
+    ``feedback_scan(collect=False)``).  Returns ``(final_state, n_steps)``
+    with ``n_steps`` the number of turns this item actually ran."""
+    def body(carry):
+        state, active, k = carry
+        new_state, _ = step_fn(state)
+        state = jax.tree.map(
+            lambda old, new: jnp.where(active, new, old), state, new_state)
+        k = k + jnp.asarray(active, jnp.int32)
+        go = jnp.asarray(cond_fn(state), bool)
+        if max_steps is not None:
+            go = jnp.logical_and(go, k < max_steps)
+        active = jnp.logical_and(active, go)
+        return state, active, k
+
+    init = (init_state, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+    state, _, k = lax.while_loop(lambda c: jnp.any(c[1]), body, init)
+    return state, k
 
 
 # ---------------------------------------------------------------------------

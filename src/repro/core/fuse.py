@@ -122,10 +122,13 @@ def _fingerprint(n: Any) -> Any:
 
 def segment_key(sub: Any, device_batch: int, axis_mult: int, plan: Any,
                 axis: str, a2a_capacity_factor: Optional[float] = None,
-                feedback_steps: Optional[int] = None) -> Optional[tuple]:
+                feedback_steps: Optional[int] = None,
+                feedback_cond: Optional[Any] = None) -> Optional[tuple]:
     """Cache key for a fused segment's jitted program, or None when any
     component resists fingerprinting (unhashable callables, odd meshes) —
-    an uncacheable segment just jits fresh, never errors."""
+    an uncacheable segment just jits fresh, never errors.  ``feedback_cond``
+    (the data-dependent loop predicate) keys by callable identity, like the
+    stage callables themselves."""
     try:
         mesh = getattr(plan, "mesh", None)
         try:
@@ -133,7 +136,8 @@ def segment_key(sub: Any, device_batch: int, axis_mult: int, plan: Any,
         except TypeError:
             mesh_id = id(mesh)
         key = (_fingerprint(sub), int(device_batch), int(axis_mult),
-               mesh_id, axis, a2a_capacity_factor, feedback_steps)
+               mesh_id, axis, a2a_capacity_factor, feedback_steps,
+               feedback_cond)
         hash(key)
         return key
     except TypeError:

@@ -33,6 +33,7 @@ import os
 import threading
 import time
 import traceback
+import warnings
 from typing import Any, Callable, List, Optional, Sequence
 
 from .node import EOS, GO_ON, FFNode, FnNode, spawn_drainer
@@ -441,22 +442,20 @@ class FFGraph:
         return g
 
     # -- the staged compiler entry point -------------------------------------
-    def compile(self, plan: Any = None, *, mode: str = "auto",
-                costs: Optional[dict] = None, sample: Any = None,
-                placements: Optional[dict] = None, capacity: int = 512,
-                results_capacity: int = 4096, axis: str = "data",
-                feedback_steps: Optional[int] = None,
-                device_batch: Optional[int] = None,
-                a2a_capacity_factor: Optional[float] = None,
-                normalize: bool = True,
-                shm_slot_bytes: int = 1 << 16,
-                adaptive: bool = False,
-                remote_workers: Optional[list] = None,
-                net_credit: int = 32,
-                transport: Any = None,
-                fuse: bool = True) -> "Runner":
+    def compile(self, plan: Any = None, *, config: Any = None,
+                **kwargs: Any) -> "Runner":
         """The staged compile pipeline ``normalize -> annotate -> place ->
-        emit`` (core/compiler.py):
+        emit`` (core/compiler.py).
+
+        The supported call shape is ``compile(config=CompileConfig(...))`` —
+        every knob (plan, mode, placements, capacities, transport, adaptive,
+        remote_workers, feedback bounds, ...) is a field of
+        :class:`~repro.core.compiler.CompileConfig`.  ``compile()`` and
+        ``compile(plan)`` stay as-is (cost-driven auto placement); passing
+        any of the old flat kwargs still works but emits one
+        ``DeprecationWarning`` per call naming the CompileConfig spelling.
+
+        The four stages:
 
         * ``normalize`` — the :meth:`optimize` rewrites;
         * ``annotate`` — per-node :class:`~repro.core.compiler.CostEstimate`
@@ -485,7 +484,12 @@ class FFGraph:
 
         ``feedback_steps=K`` lets a ``wrap_around`` graph lower onto the mesh
         through ``core.device.feedback_scan`` (K synchronous turns of the
-        feedback channel).  ``a2a_capacity_factor`` bounds the device
+        feedback channel); ``feedback_cond=pred`` makes the loop
+        data-dependent instead — host runners evaluate ``pred(item)`` per
+        feedback turn and deliver the item once it goes false, device
+        lowering goes through ``core.device.feedback_while``
+        (``lax.while_loop``) with ``feedback_steps`` as an optional cap.
+        ``a2a_capacity_factor`` bounds the device
         all_to_all expert lanes (default: lossless, host-parity).
         ``shm_slot_bytes`` sizes the fixed shared-memory ring slots of
         process-placed farms (raise it for large batches).  ``transport=``
@@ -512,21 +516,29 @@ class FFGraph:
         adjusts live from the runner's own ``stats()`` — see
         ``core/runtime.py``.  Without a supervisor the adaptive runner
         behaves like the static one."""
-        from .compiler import compile_graph
-        return compile_graph(self, plan, mode=mode, costs=costs,
-                             sample=sample, placements=placements,
-                             capacity=capacity,
-                             results_capacity=results_capacity, axis=axis,
-                             feedback_steps=feedback_steps,
-                             device_batch=device_batch,
-                             a2a_capacity_factor=a2a_capacity_factor,
-                             normalize=normalize,
-                             shm_slot_bytes=shm_slot_bytes,
-                             adaptive=adaptive,
-                             remote_workers=remote_workers,
-                             net_credit=net_credit,
-                             transport=transport,
-                             fuse=fuse)
+        from .compiler import CompileConfig, compile_graph
+        if config is not None:
+            if plan is not None:
+                raise GraphError("compile(config=...) already carries the "
+                                 "plan — drop the positional plan argument")
+            if kwargs:
+                raise GraphError("compile(config=...) does not mix with the "
+                                 f"legacy kwargs {sorted(kwargs)} — set them "
+                                 "on the CompileConfig instead")
+            return compile_graph(self, config=config)
+        if kwargs:
+            known = {f.name for f in dataclasses.fields(CompileConfig)}
+            unknown = sorted(k for k in kwargs if k not in known)
+            if unknown:
+                raise TypeError("compile() got unexpected keyword "
+                                f"argument(s) {unknown}; see CompileConfig "
+                                "for the supported knobs")
+            warnings.warn(
+                "FFGraph.compile(**kwargs) is deprecated — pass a "
+                "CompileConfig: compile(config=CompileConfig("
+                + ", ".join(f"{k}=..." for k in sorted(kwargs)) + "))",
+                DeprecationWarning, stacklevel=2)
+        return compile_graph(self, config=CompileConfig(plan=plan, **kwargs))
 
     def lower(self, plan: Any = None, *, capacity: int = 512,
               results_capacity: int = 4096, axis: str = "data") -> "Runner":
@@ -778,12 +790,17 @@ class HostRunner(Runner):
     ``InferenceEngine`` / ``JaxAccelerator``-style usage)."""
 
     def __init__(self, graph: FFGraph, capacity: int = 512,
-                 results_capacity: int = 4096):
+                 results_capacity: int = 4096,
+                 feedback_cond: Optional[Callable] = None):
         built = _build_host(graph.root, capacity)
         if not isinstance(built, Skeleton):
             built = Pipeline(built, capacity=capacity)
         self._skel = built
         self._wrap = graph._wrap
+        # data-dependent feedback: an item coming off the feedback edge
+        # re-enters the loop only while cond(item) holds, and is delivered
+        # as a result once it goes false (mirrors device feedback_while)
+        self._feedback_cond = feedback_cond if graph._wrap else None
         self._cap = capacity
         self._results = SPSCQueue(results_capacity)
         self._in_q: Optional[SPSCQueue] = None
@@ -791,6 +808,8 @@ class HostRunner(Runner):
         # edge, wait()'s error unwind): serialise pushes so the SPSC
         # invariant holds
         self._push_lock = threading.Lock()
+        self._fed = 0
+        self._feed_done = False
         self._t0 = self._t1 = 0.0
 
     # -- wiring ---------------------------------------------------------------
@@ -815,7 +834,11 @@ class HostRunner(Runner):
         elif isinstance(item, Deliver):
             self._results.push(item.value)
         elif self._wrap:
-            self._push_in(item)
+            if (self._feedback_cond is not None
+                    and not bool(self._feedback_cond(item))):
+                self._results.push(item)
+            else:
+                self._push_in(item)
         else:
             self._results.push(item)
 
@@ -927,6 +950,13 @@ class HostRunner(Runner):
         TimeoutError the feeder stops but node threads cannot be killed —
         discard the runner (graphs are single-use anyway)."""
         self._abandoned = False
+        self._fed, self._feed_done = 0, False
+        # a cond-terminated feedback graph delivers exactly one result per
+        # fed item (each loops until its cond goes false) but no node ever
+        # returns EOS — the collector below counts it out, then run() feeds
+        # the terminating EOS itself
+        counted = (stream is not None and self._wrap
+                   and self._feedback_cond is not None)
         if stream is None:
             self.start_stream()
         else:
@@ -940,20 +970,40 @@ class HostRunner(Runner):
                     if self._abandoned:
                         return
                     self.offload(x)
+                    self._fed += 1
+                self._feed_done = True
                 if not self._wrap:      # feedback graphs terminate themselves
                     self.offload(EOS)
             threading.Thread(target=feed, daemon=True,
                              name="ff-run-feeder").start()
         out = []
         try:
+            last = time.monotonic()
             while True:
-                item = self._results.pop(timeout)
+                if counted and self._feed_done and len(out) >= self._fed:
+                    break
+                if counted:
+                    # bounded slices so the count-out condition above is
+                    # rechecked after the feeder finishes (an unbounded pop
+                    # could block forever once the last result is in)
+                    try:
+                        item = self._results.pop(0.05)
+                    except TimeoutError:
+                        if timeout is not None \
+                                and time.monotonic() - last > timeout:
+                            raise
+                        continue
+                    last = time.monotonic()
+                else:
+                    item = self._results.pop(timeout)
                 if item is EOS:
                     break
                 out.append(item)
         except BaseException:
             self._abandoned = True
             raise
+        if counted:
+            self.offload(EOS)
         if self.wait(timeout) != 0:
             raise self.error()
         return out
@@ -1102,6 +1152,7 @@ class DeviceRunner(Runner):
 
     def __init__(self, graph: FFGraph, plan: Any, axis: str = "data",
                  feedback_steps: Optional[int] = None,
+                 feedback_cond: Optional[Callable] = None,
                  a2a_capacity_factor: Optional[float] = None,
                  fuse: bool = True):
         from .compiler import _top_stages, make_device_batched
@@ -1115,17 +1166,20 @@ class DeviceRunner(Runner):
         self._axis_size = 1
 
         def _add_part(sub: FFGraph, desc: str,
-                      steps: Optional[int] = None) -> None:
+                      steps: Optional[int] = None,
+                      cond: Optional[Callable] = None) -> None:
             batched, mult = make_device_batched(
                 sub, plan, axis=axis, feedback_steps=steps,
+                feedback_cond=cond,
                 a2a_capacity_factor=a2a_capacity_factor)
             key = segment_key(sub, 0, mult, plan, axis,
-                              a2a_capacity_factor, steps)
+                              a2a_capacity_factor, steps, cond)
             self._parts.append([desc, jit_segment(batched, key), 0.0, 0])
             self._axis_size = max(self._axis_size, mult)
 
         if graph._wrap:
-            _add_part(graph, graph.describe(), steps=feedback_steps)
+            _add_part(graph, graph.describe(), steps=feedback_steps,
+                      cond=feedback_cond)
         elif fuse:
             stages = _top_stages(graph)
             _add_part(graph, " + ".join(s.describe() for s in stages))

@@ -82,6 +82,35 @@ class ReplacementEvent:
         return f"[{self.kind}] {self.stage}: {self.detail}{lat}"
 
 
+@dataclasses.dataclass
+class SLOPolicy:
+    """Overload policy for SLO-controllable stages (the serving engine's
+    admission stage): how hard to push back as backlog approaches capacity,
+    instead of queueing unboundedly.
+
+    Pressure is the backlog/capacity ratio of the stage's ``stats()["slo"]``
+    block.  Below ``degrade_at`` the stage runs unconstrained (level 0); in
+    [``degrade_at``, ``shed_at``) it *degrades* (level 1: new requests'
+    ``max_new_tokens`` capped at ``degrade_tokens``, early-exit thresholds
+    tightened by ``exit_margin``); at ``shed_at`` and above it *sheds*
+    (level 2: new submissions rejected with a typed ``Overloaded`` result).
+    The controlled stage always enforces its own hard cap inline — the
+    supervisor policy moves the soft thresholds below it."""
+
+    degrade_at: float = 0.5
+    shed_at: float = 0.9
+    degrade_tokens: int = 8
+    exit_margin: float = 0.5
+
+    def level(self, backlog: int, capacity: int) -> int:
+        ratio = backlog / max(1, capacity)
+        if ratio >= self.shed_at:
+            return 2
+        if ratio >= self.degrade_at:
+            return 1
+        return 0
+
+
 class AdaptiveFarmNode(FFNode):
     """A farm stage that can be re-placed *while the stream runs*.
 
@@ -329,9 +358,13 @@ class Supervisor:
                  observe: bool = True, hi: float = 2.0, lo: float = 0.25,
                  gil_threshold: float = 0.8, hysteresis: float = 0.8,
                  hop_factor: float = 3.0, cooldown_s: float = 1.0,
-                 min_window_items: int = 4, observe_every: int = 10):
+                 min_window_items: int = 4, observe_every: int = 10,
+                 slo: Optional[SLOPolicy] = None):
         self.runner = runner
         self.handles: List[StageHandle] = list(runner.stage_handles())
+        self.slo = slo or SLOPolicy()
+        self._slo_levels: Dict[int, int] = {}
+        self._observed_final = False
         self.interval = interval
         self.resize_enabled = resize
         self.migrate_enabled = migrate
@@ -365,11 +398,16 @@ class Supervisor:
         return self
 
     def stop(self, timeout: float = 10.0) -> None:
+        """Stop the sampling loop and flush the final observation.
+        Idempotent: a second (or concurrent) stop joins nothing and does not
+        re-observe — callers may stop unconditionally, whether or not the
+        supervisor was ever started."""
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout)
-            self._thread = None
-        if self.observe_enabled:
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join(timeout)
+        if self.observe_enabled and not self._observed_final:
+            self._observed_final = True
             snaps = []
             for h in self.handles:
                 try:
@@ -399,6 +437,8 @@ class Supervisor:
             self.samples += 1
             if h.reconfigurable:
                 self._act(i, h, s)
+            if getattr(h, "slo_controllable", False):
+                self._slo_act(i, h, s)
         self._ticks += 1
         if self.observe_enabled and self._ticks % self.observe_every == 0:
             self.observed_facts += pm.observe({"stages": snaps})
@@ -407,6 +447,33 @@ class Supervisor:
                 latency_ms: Optional[float] = None) -> None:
         self.events.append(ReplacementEvent(time.time(), stage, kind, detail,
                                             latency_ms))
+
+    def _slo_act(self, i: int, h: StageHandle, s: dict) -> None:
+        """Overload policy for SLO-controllable stages: derive the pressure
+        level from the stage's backlog-vs-capacity ratio and push it down
+        through ``set_pressure`` — 0 unconstrained, 1 degrade (cap tokens,
+        tighten early exit), 2 shed (reject new submissions with
+        ``Overloaded``).  The stage's own inline hard cap stays the
+        backstop; this moves the soft thresholds under it."""
+        slo = s.get("slo") or {}
+        backlog = int(slo.get("backlog", 0) or 0)
+        capacity = int(slo.get("capacity", 0) or 0)
+        if capacity <= 0:
+            return
+        level = self.slo.level(backlog, capacity)
+        prev = self._slo_levels.get(i, 0)
+        if level == prev:
+            return
+        self._slo_levels[i] = level
+        try:
+            h.set_pressure(level, self.slo)
+        except Exception:               # noqa: BLE001 - stage already gone
+            return
+        kind = {0: "restore", 1: "degrade", 2: "shed"}[level]
+        self._record(s.get("node", h.desc), kind,
+                     f"backlog {backlog}/{capacity} "
+                     f"({backlog / max(1, capacity):.0%}): pressure "
+                     f"{prev} -> {level}")
 
     def _act(self, i: int, h: StageHandle, s: dict) -> None:
         now = time.monotonic()

@@ -95,12 +95,13 @@ class DataPipeline:
                 # boundary node are FIFO
                 stages.append(ff_seq(compute, pure=True))
         self.graph: FFGraph = ff_pipeline(*stages)
-        self._runner = self.graph.compile(
-            plan if compute is not None else None,
+        from ..core.compiler import CompileConfig
+        self._runner = self.graph.compile(config=CompileConfig(
+            plan=plan if compute is not None else None,
             capacity=max(2, prefetch), results_capacity=max(2, prefetch),
             device_batch=1, placements=placements,
             shm_slot_bytes=shm_slot_bytes, adaptive=adaptive,
-            transport=transport)
+            transport=transport))
         self.placements = getattr(self._runner, "placements", [])
         # adaptive mode: a Supervisor thread samples the runner's stage
         # handles, re-places the compute farm live (width + thread/process

@@ -1,5 +1,7 @@
-"""Serving launcher: continuous-batching engine behind the paper's
-accelerator API.
+"""Serving launcher: the continuous-batching engine behind the typed
+client API (``submit`` -> ``RequestHandle``, ``results()``, context-manager
+lifecycle) — the paper's accelerator surface remains available on the
+engine for compat.
 
     PYTHONPATH=src python -m repro.launch.serve --arch ff-tiny --requests 8
 """
@@ -14,10 +16,9 @@ import jax
 import numpy as np
 
 from ..configs import get
-from ..core import FF_EOS
 from ..core.plan import single_device_plan
 from ..runtime.steps import init_state
-from ..serving import InferenceEngine, Request
+from ..serving import InferenceEngine, Overloaded, Request
 
 
 def main():
@@ -28,10 +29,18 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request SLO deadline in seconds: past it a "
+                         "request finishes truncated (or is shed before "
+                         "admission)")
+    ap.add_argument("--exit-threshold", type=float, default=None,
+                    help="FastBERT-style early exit: stop decoding a "
+                         "request once next-token confidence (max softmax "
+                         "prob) reaches this")
     ap.add_argument("--adaptive", action="store_true",
                     help="attach the runtime Supervisor: live stage stats "
-                         "sampling + cost-model observation (re-placement "
-                         "events land in the placement report)")
+                         "sampling, SLO pressure-level control, cost-model "
+                         "observation (events land in the report)")
     ap.add_argument("--tuned", action="store_true",
                     help="tuned host runtime: tcmalloc LD_PRELOAD when "
                          "installed + single-threaded XLA:CPU Eigen "
@@ -48,32 +57,35 @@ def main():
     params = init_state(cfg, plan, jax.random.PRNGKey(0))["params"]
 
     eng = InferenceEngine(cfg, plan, params, max_batch=args.max_batch,
-                          cache_len=args.cache_len, adaptive=args.adaptive)
+                          cache_len=args.cache_len, adaptive=args.adaptive,
+                          exit_threshold=args.exit_threshold)
     print(f"engine graph: {eng.graph.describe()}")
     for desc, p in eng.placements:
         print(f"  [{p.target:6s}] {desc}")
-    eng.run_then_freeze()
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    for i in range(args.requests):
-        eng.offload(Request(
-            prompt=rng.integers(0, cfg.vocab, args.prompt_len,
-                                dtype=np.int32),
-            max_new_tokens=args.max_new, id=i))
-    eng.offload(FF_EOS)
-    total_toks = 0
-    while True:
-        ok, req = eng.load_result()
-        if not ok:
-            break
-        total_toks += len(req.tokens)
-        print(f"req {req.id}: {len(req.tokens)} tokens in "
-              f"{(req.finish_t - req.submit_t)*1e3:.0f} ms")
-    eng.wait()
+    total_toks = shed = 0
+    with eng:
+        for i in range(args.requests):
+            eng.submit(Request(
+                prompt=rng.integers(0, cfg.vocab, args.prompt_len,
+                                    dtype=np.int32),
+                max_new_tokens=args.max_new, deadline_s=args.deadline))
+    for out in eng.results():
+        if isinstance(out, Overloaded):
+            shed += 1
+            print(f"req {out.request.id}: SHED ({out.reason})")
+            continue
+        total_toks += len(out.tokens)
+        print(f"req {out.id}: {len(out.tokens)} tokens "
+              f"[{out.finish_reason}] in "
+              f"{(out.finish_t - out.submit_t)*1e3:.0f} ms")
     dt = time.perf_counter() - t0
-    print(f"served {args.requests} requests, {total_toks} tokens in "
-          f"{dt:.2f}s ({total_toks/dt:.1f} tok/s); decode steps={eng.steps}")
-    print("engine graph stats (svc-time EMA / items / lane depths):")
+    print(f"served {args.requests - shed}/{args.requests} requests, "
+          f"{total_toks} tokens in {dt:.2f}s ({total_toks/dt:.1f} tok/s); "
+          f"decode steps={eng.steps}, early exits={eng.early_exits}, "
+          f"shed={eng.shed_count}")
+    print("engine graph stats (svc-time EMA / cache occupancy / SLO):")
     print("  " + json.dumps(eng.stats(), default=str))
     if args.adaptive:
         events = eng.replacement_events()

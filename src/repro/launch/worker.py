@@ -20,7 +20,7 @@ Two-"host" loopback run (both "hosts" on one machine, distinct ports):
     # terminal 3 — the program: farm workers live in the two pools
     PYTHONPATH=src python - <<'EOF'
     import numpy as np
-    from repro.core import FFGraph, farm, pipeline, seq
+    from repro.core import CompileConfig, FFGraph, farm, pipeline, seq
 
     def heavy(x):                      # GIL-bound: remote tier pays off
         return np.tanh(x @ x.T).sum()
@@ -31,8 +31,9 @@ Two-"host" loopback run (both "hosts" on one machine, distinct ports):
         farm(heavy, n=2),
         seq(print),
     ))
-    g.compile(mode="remote",
-              remote_workers=["127.0.0.1:7001", "127.0.0.1:7002"]).run()
+    g.compile(config=CompileConfig(
+        mode="remote",
+        remote_workers=["127.0.0.1:7001", "127.0.0.1:7002"])).run()
     EOF
 
 ``--listen host:0`` binds an ephemeral port and prints the bound address

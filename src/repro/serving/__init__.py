@@ -1,3 +1,3 @@
-from .engine import InferenceEngine, Request
+from .engine import InferenceEngine, Overloaded, Request, RequestHandle
 
-__all__ = ["InferenceEngine", "Request"]
+__all__ = ["InferenceEngine", "Overloaded", "Request", "RequestHandle"]

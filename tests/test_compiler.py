@@ -398,3 +398,90 @@ def test_a2a_crashed_left_worker_releases_producer():
     assert r.wait(timeout=30) == -1
     assert isinstance(r.error(), RuntimeError)
     assert got == [i * 2 for i in range(1, 60, 2)]   # surviving left worker
+
+
+# -- data-dependent feedback: feedback_cond / feedback_while --------------------
+def test_feedback_cond_host_device_parity(plan):
+    """The same ``feedback_cond=`` predicate drives the host re-entry path
+    and the device ``feedback_while`` lowering to identical values; host
+    wrap output is arrival-ordered, so compare sorted."""
+
+    def f(x):
+        return x * np.float32(0.5)
+
+    def still_big(x):
+        return x > 1.0
+
+    xs = [np.float32(5.0), np.float32(1.5), np.float32(40.0)]
+
+    host_r = pipeline(f).wrap_around().compile(feedback_cond=still_big)
+    host = [float(v) for v in host_r.run(xs)]
+
+    dev_r = pipeline(f).wrap_around().compile(
+        plan, feedback_cond=still_big, feedback_steps=64)
+    assert all(p.target == "device" for _, p in dev_r.placements)
+    dev = [float(v) for v in dev_r.run(xs)]
+
+    assert sorted(host) == pytest.approx(sorted(dev))
+    # the exit was data-dependent, not the 64-step cap: every lane stopped
+    # as soon as it crossed 1.0 (running to the cap would leave ~1e-18)
+    assert all(0.5 < v <= 1.0 for v in dev)
+
+
+def test_feedback_cond_alone_lowers_to_device(plan):
+    # a data-dependent predicate needs no step bound to reach the mesh
+    r = pipeline(lambda x: x * np.float32(0.25)).wrap_around().compile(
+        plan, feedback_cond=lambda x: x > 1.0)
+    assert all(p.target == "device" for _, p in r.placements)
+    out = sorted(float(v) for v in r.run([np.float32(8.0),
+                                          np.float32(2.0)]))
+    assert out == pytest.approx([0.5, 0.5])
+
+
+def test_feedback_while_counts_steps_and_respects_cap():
+    import jax.numpy as jnp
+    from repro.core.device import feedback_while
+
+    step = lambda s: (s * 0.5, 0.0)
+    final, n = feedback_while(step, jnp.float32(8.0), lambda s: s > 1.0)
+    assert float(final) == pytest.approx(1.0) and int(n) == 3
+    # do-while: the body always runs at least once
+    final, n = feedback_while(step, jnp.float32(0.25), lambda s: s > 1.0)
+    assert float(final) == pytest.approx(0.125) and int(n) == 1
+    # the cap wins when the predicate would keep going
+    final, n = feedback_while(step, jnp.float32(1e9), lambda s: s > 1.0,
+                              max_steps=3)
+    assert int(n) == 3
+
+
+# -- CompileConfig: the consolidated compile surface ----------------------------
+def test_compile_config_equivalent_to_legacy_kwargs():
+    from repro.core import CompileConfig
+    xs = [np.float32(i) for i in range(6)]
+
+    def tw(x):
+        return x * np.float32(2.0)
+
+    with pytest.warns(DeprecationWarning) as rec:
+        old = pipeline(tw).compile(capacity=8).run(xs)
+    assert len([w for w in rec if w.category is DeprecationWarning]) == 1
+
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        new = pipeline(tw).compile(
+            config=CompileConfig(capacity=8)).run(xs)
+        bare = pipeline(tw).compile().run(xs)  # no kwargs: no warning
+    assert [float(v) for v in old] == [float(v) for v in new]
+    assert [float(v) for v in bare] == [float(v) for v in new]
+
+
+def test_compile_config_rejects_mixing_and_unknown_knobs():
+    from repro.core import CompileConfig
+    g = pipeline(lambda x: x)
+    with pytest.raises(TypeError):
+        g.compile(capcity=8)  # typo'd knob: loud, not silently ignored
+    with pytest.raises(GraphError):
+        g.compile(config=CompileConfig(), capacity=8)
+    with pytest.raises(GraphError):
+        g.compile("not-none-plan", config=CompileConfig())

@@ -4,18 +4,22 @@ against the committed ``benchmarks/BENCH_baseline.json``.
 
 Gated fields, by shape:
 
-- ``items_per_s`` (higher is better) and ``ratio_best`` (the best
-  demonstrated pair ratio of an interleaved comparison run — process-vs-
-  thread farm/a2a, vectored-vs-per-item shm lane — higher is better) fail
-  below ``(1 - max_regression)`` of the baseline;
+- ``items_per_s`` and ``goodput_items_per_s`` (the serving bench's
+  finished-requests-per-second under 2x-overload Poisson replay — higher
+  is better) and ``ratio_best`` (the best demonstrated pair ratio of an
+  interleaved comparison run — process-vs-thread farm/a2a, vectored-vs-
+  per-item shm lane — higher is better) fail below
+  ``(1 - max_regression)`` of the baseline;
 - ``reconfig_latency_ms`` (lower is better — the adaptive runtime's live
-  drain-and-swap cost) and ``net_rtt_us`` (lower is better — the
-  distributed tier's loopback lane round-trip, the per-item price of
-  leaving the host) fail above ``(1 + max_latency_increase)`` of the
-  baseline; the default bound is generous (2.0 = 3x) because the swap
-  forks worker processes and the loopback RTT rides the kernel scheduler,
-  both noisy on shared hosts.  Latency fields are machine-normalized the
-  same way throughput is (divided by the reference metric's speed ratio).
+  drain-and-swap cost), ``net_rtt_us`` (lower is better — the distributed
+  tier's loopback lane round-trip, the per-item price of leaving the
+  host), and ``latency_ms`` (the serving bench's p50 admitted-request
+  latency under overload — lower is better) fail above
+  ``(1 + max_latency_increase)`` of the baseline; the default bound is
+  generous (2.0 = 3x) because the swap forks worker processes and the
+  loopback RTT rides the kernel scheduler, both noisy on shared hosts.
+  Latency fields are machine-normalized the same way throughput is
+  (divided by the reference metric's speed ratio).
 
 Raw ``us_per_call`` latencies are deliberately ignored.  Two mechanisms
 keep the gate from flapping on heterogeneous/noisy CI runners:
@@ -106,9 +110,11 @@ def compare(new: dict, base: dict, max_regression: float,
             continue
         # (field, machine-speed normalization, higher-is-better?)
         for field, norm, hib in (("items_per_s", scale, True),
+                                 ("goodput_items_per_s", scale, True),
                                  ("ratio_best", 1.0, True),
                                  ("reconfig_latency_ms", 1.0 / scale, False),
-                                 ("net_rtt_us", 1.0 / scale, False)):
+                                 ("net_rtt_us", 1.0 / scale, False),
+                                 ("latency_ms", 1.0 / scale, False)):
             if field not in n_rec or field not in b_rec:
                 continue
             if field == "items_per_s" and name == reference:
