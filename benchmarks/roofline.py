@@ -5,11 +5,13 @@ bottleneck, MODEL_FLOPS ratio, and one-line recommendations.
     PYTHONPATH=src python -m benchmarks.roofline [--mesh sp|mp] [--tag t]
 
 ``--autotune`` instead sweeps kernel tile sizes (``a2a_fused`` ``block_t``
-per (T, E, D) shape) on this host, prints the winners, and persists them
-into the perf_model cache (``REPRO_FF_CACHE``, same read-only-dir
-degradation as ``calibrate()``) so ``_pick_block`` and ``place`` pick them
-up in later runs.  ``--quick`` sweeps one small shape for CI cache
-pre-warming; ``--no-write`` keeps the sweep in-memory.
+per (T, E, D) shape) *and* the overlapped device boundary's in-flight
+window depth (``device_overlap:window``) on this host, prints the winners,
+and persists them into the perf_model cache (``REPRO_FF_CACHE``, same
+read-only-dir degradation as ``calibrate()``) so ``_pick_block``, ``place``
+and ``emit``'s default ``inflight`` pick them up in later runs.  ``--quick``
+sweeps one small shape for CI cache pre-warming; ``--no-write`` keeps the
+sweep in-memory.
 """
 
 from __future__ import annotations
@@ -109,6 +111,38 @@ def _time_call(fn, repeats=3):
     return best
 
 
+WINDOW_DEPTHS = [2, 4, 8]    # depth only matters once the boundary overlaps
+
+
+def _sweep_window_depth(quick=False):
+    """Sweep the overlapped boundary's in-flight window depth on the
+    software-pipelined device path (``DeviceRunner._run_pipelined``) and
+    return the ``device_overlap:window`` autotune entry — ``emit`` reads it
+    as the default ``inflight`` when ``CompileConfig`` leaves it unset."""
+    import numpy as np
+
+    from repro.core import pipeline
+    from repro.core.compiler import CompileConfig
+    from repro.core.plan import single_device_plan
+
+    plan = single_device_plan()
+    n_items = 24 if quick else 48
+    base = np.linspace(-1.0, 1.0, 128, dtype=np.float32)
+    stream = [base * (1.0 + 0.01 * i) for i in range(n_items)]
+    sweep = {}
+    for k in WINDOW_DEPTHS:
+        r = pipeline(lambda x: x * 1.5 + 0.25,
+                     lambda x: x - 0.125).compile(config=CompileConfig(
+                         plan=plan, mode="device", microbatch=2, inflight=k))
+        r.run(stream)                                    # compile / warm up
+        sweep[k] = _time_call(lambda: r.run(stream))
+    win = min(sweep, key=sweep.get)
+    return {"device_overlap:window": {
+        "inflight": int(win), "time_s": float(sweep[win]),
+        "sweep": {str(k): float(v) for k, v in sweep.items()},
+    }}
+
+
 def autotune(quick=False, write=True):
     """Sweep ``a2a_fused`` ``block_t`` per shape on this host; returns the
     winners dict and (optionally) persists it via ``perf_model``."""
@@ -144,13 +178,15 @@ def autotune(quick=False, write=True):
             "block_t": int(win), "time_s": float(sweep[win]),
             "sweep": {str(k): float(v) for k, v in sweep.items()},
         }
+    entries.update(_sweep_window_depth(quick))
     n = pm.record_autotuned(entries, write=write)
-    hdr = ["shape", "winner block_t", "best s", "sweep"]
+    hdr = ["key", "winner", "best s", "sweep"]
     print("| " + " | ".join(hdr) + " |")
     print("|" + "---|" * len(hdr))
     for k, rec in entries.items():
         sweep = " ".join(f"{b}:{t:.2e}" for b, t in rec["sweep"].items())
-        print(f"| {k} | {rec['block_t']} | {rec['time_s']:.2e} | {sweep} |")
+        win = rec.get("block_t", rec.get("inflight"))
+        print(f"| {k} | {win} | {rec['time_s']:.2e} | {sweep} |")
     print(f"# recorded {n} autotune entr{'y' if n == 1 else 'ies'} "
           f"({'persisted' if write else 'in-memory only'})")
     return entries

@@ -124,6 +124,32 @@ win at much smaller stage grain, and kernel tile sizes come from
 ``benchmarks/roofline.py --autotune`` winners persisted in the
 ``perf_model`` cache.
 
+The overlapped device boundary: fusion made each host<->device hop cost one
+dispatch; overlap makes those dispatches *asynchronous and software-
+pipelined*.  Both boundary emits — the hybrid runner's
+``_DeviceStageNode`` and ``DeviceRunner``'s microbatched whole-graph path —
+keep a depth-K in-flight window of microbatches riding JAX's async
+dispatch: microbatch i+1 stacks and dispatches, and i-1's device->host copy
+completes (``copy_to_host_async``), while i computes; nothing calls
+``block_until_ready`` until the window is full, and FIFO retirement
+preserves exact input order.  Three ``CompileConfig`` knobs govern it —
+``overlap`` (default True), ``microbatch`` (the boundary's stacking unit,
+``device_batch``'s modern name), and ``inflight`` (the window depth,
+defaulting to the ``device_overlap:window`` winner the
+``roofline.py --autotune`` depth sweep persists in the ``perf_model``
+cache).  ``overlap=False`` (or ``inflight=1``) restores the strictly
+synchronous put -> compute -> copy-out boundary and is byte-identical —
+the same jitted programs see the same stacked inputs; only the
+synchronization point moves — which is what the ``device_overlap_speedup``
+bench gates in CI.  ``place`` costs a fused device run at
+``max(transfer, compute)`` through the calibrated h2d/d2h bandwidths and
+overlap efficiency (calib cache v5), boundary nodes publish
+submit/drain/stall stats through a ``boundary_tunable``
+``DeviceBoundaryHandle``, and the runtime Supervisor retunes the window
+depth live from the observed stall fraction.  Feedback (``wrap_around``)
+graphs force the sync boundary — a window holding results back would
+starve the loop.
+
 The adaptive runtime (``core.runtime``) closes the stats -> placement loop
 *at runtime*: ``compile(adaptive=True)`` lowers eligible farms to
 reconfigurable ``AdaptiveFarmNode`` boundary stages (sequence-ordered on

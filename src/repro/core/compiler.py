@@ -64,8 +64,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from . import perf_model as pm
 from .fuse import FusedSegment, fuse_device_segments, segment_key
 from .graph import (A2AG, DeviceRunner, FarmG, FFGraph, GraphError,
-                    HostRunner, MapG, PipeG, SeqG, _device_fn, _is_pure_seq,
-                    _pure_of)
+                    HostRunner, MapG, PipeG, SeqG, StageHandle, _device_fn,
+                    _is_pure_seq, _pure_of)
 from .node import GO_ON, FFNode
 from .process import ProcessA2ANode, ProcessFarmNode, fn_picklable
 
@@ -96,7 +96,25 @@ class CompileConfig:
     false), on device the loop lowers through
     :func:`~repro.core.device.feedback_while` (``jax.lax.while_loop``)
     instead of the fixed-turn ``feedback_scan``; ``feedback_steps`` then acts
-    as an optional safety cap on the turn count."""
+    as an optional safety cap on the turn count.
+
+    The overlapped device boundary (three knobs).  ``overlap=True`` (the
+    default) makes every :class:`_DeviceStageNode` software-pipeline its
+    microbatches through a depth-K in-flight window: the jitted segment for
+    microbatch *i* is dispatched asynchronously (JAX async dispatch — no
+    per-batch ``block_until_ready``) and its device->host copy-out is only
+    awaited once *K-1* newer microbatches have been dispatched behind it, so
+    host stacking + ``device_put`` of microbatch *i+1* and the copy-out of
+    *i-1* ride under the compute of *i*.  ``overlap=False`` restores the
+    strictly synchronous put -> compute -> copy-out boundary (A/B
+    benchmarks, parity tests); results are byte-identical either way — only
+    the synchronization point moves.  ``microbatch=`` overrides the
+    boundary's stacking depth (default: ``device_batch`` heuristic, 8x the
+    mesh axis), ``inflight=`` the window depth K (default: the roofline
+    autotuner's ``device_overlap:window`` sweep winner, else 2).  Feedback
+    (``wrap_around``) graphs always compile the synchronous boundary: items
+    circulate one at a time, and a window holding results back would
+    deadlock the loop."""
 
     plan: Any = None
     mode: str = "auto"
@@ -117,6 +135,9 @@ class CompileConfig:
     net_credit: int = 32
     transport: Any = None
     fuse: bool = True
+    overlap: bool = True
+    microbatch: Optional[int] = None
+    inflight: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -616,6 +637,18 @@ def place(graph: FFGraph, plan: Any = None, overrides: Optional[Dict] = None,
         dev_t = (c.device_time(n_chips, dev_dispatch)
                  if plan is not None and not autoscale
                  and _device_eligible(s) else None)
+        if dev_t is not None:
+            # the overlapped boundary: a fused device run pays
+            # max(transfer, compute) + the unhidden remainder, never their
+            # sum — the h2d put of microbatch i+1 and the d2h copy-out of
+            # i-1 ride under the compute of i (calibrated overlap_eff says
+            # how much actually hides on this host).  The item crosses the
+            # boundary once per fused run, so the per-stage byte estimate
+            # amortizes over the run length.
+            xfer = (c.bytes / max(1, run_len[i])) * (
+                1.0 / (calib.h2d_bw_gbs * 1e9)
+                + 1.0 / (calib.d2h_bw_gbs * 1e9)) if c.bytes > 0 else 0.0
+            dev_t = calib.boundary_time(xfer, dev_t)
         # the process tier only pays off for demonstrably GIL-bound work
         # wide enough to parallelize (an unknown signal stays on threads),
         # and only past a hysteresis margin over the thread estimate — a
@@ -802,12 +835,28 @@ class _DeviceStageNode(FFNode):
     microbatch, moves it onto the mesh with the data-axis sharding, runs the
     jitted device segment, and streams the unstacked results downstream.
     The SPSC queues around it are exactly FastFlow's bounded lanes — the
-    device never waits on the host unless the host truly falls behind."""
+    device never waits on the host unless the host truly falls behind.
+
+    With ``overlap`` (the default) the boundary is *software-pipelined*
+    through a depth-K in-flight window, the double-buffered SPSC hand-off of
+    the 2009 TR applied to the most expensive hop in the system: dispatching
+    microbatch *i* does NOT synchronize — the jitted call returns
+    unfinalized arrays (JAX async dispatch), a device->host copy is started
+    eagerly (``copy_to_host_async``), and the result is only awaited when
+    *K-1* newer microbatches have been dispatched behind it.  Host stacking
+    + ``device_put`` of microbatch *i+1* and the copy-out of *i-1* thus ride
+    under the compute of *i*.  Retirement is FIFO, so exact input order is
+    preserved; the bytes are identical to the synchronous boundary because
+    the same jitted program sees the same stacked inputs — only the
+    synchronization point moves.  ``inflight=1`` (or ``overlap=False``)
+    degenerates to the strictly synchronous put -> compute -> copy path."""
 
     def __init__(self, batched: Callable, axis_mult: int, device_batch: int,
                  sharding: Any = None, label: str = "device",
-                 jit_key: Optional[tuple] = None):
+                 jit_key: Optional[tuple] = None, overlap: bool = True,
+                 inflight: int = 2):
         super().__init__()
+        import collections
         from .fuse import jit_segment
         # jit through the fused-segment cache: re-compile() of the same
         # graph (the adaptive Supervisor's re-place path) reuses the traced
@@ -820,25 +869,55 @@ class _DeviceStageNode(FFNode):
         self._buf: List[Any] = []
         self._off = 0
         self._flushes = 0
+        self._inflight = max(1, int(inflight)) if overlap else 1
+        self._window = collections.deque()   # FIFO of (n, ys) in flight
+        self._abandoned = False
+        # boundary accounting (cumulative seconds; under _stats_lock):
+        # host-side submit (stack + put + async dispatch), copy-out wait
+        # (compute remainder + d2h), and the share of that wait paid while
+        # the window was full — the stall the Supervisor retunes against
+        self._t_submit = 0.0
+        self._t_drain = 0.0
+        self._t_stall = 0.0
+        self._retired = 0
 
     def svc(self, item: Any) -> Any:
+        if self._abandoned:
+            return GO_ON            # shutdown: drop instead of dispatching
         self._buf.append(item)
         if len(self._buf) >= self._B:
-            self._flush()
+            self._dispatch()
         return GO_ON
 
     def svc_end(self) -> None:
-        if self._buf:
-            try:
-                self._flush()       # the final partial microbatch
-            except BaseException as e:   # noqa: BLE001
-                self.error = e      # svc_end runs outside the svc try-block
-                raise
+        try:
+            if self._buf and not self._abandoned:
+                self._dispatch()    # the final partial microbatch
+            while self._window:     # drain the in-flight window, in order
+                self._retire(*self._window.popleft())
+        except BaseException as e:   # noqa: BLE001
+            # svc_end runs outside the svc try-block: record the error
+            # ourselves and never leave submitted work unawaited
+            if self.error is None:
+                self.error = e
+            self._window.clear()
+            self._buf = []
+            raise
 
-    def _flush(self) -> None:
+    def abandon(self) -> None:
+        """Shutdown path (:meth:`HybridRunner.shutdown`): drop the partial
+        buffer and stop emitting.  The node's own thread still *retires*
+        every in-flight microbatch in ``svc_end`` — awaiting the dispatched
+        work releases its device buffers — but discards the results instead
+        of pushing them at a consumer that is gone."""
+        self._abandoned = True
+        self._buf = []
+
+    def _dispatch(self) -> None:
         import jax
         import jax.numpy as jnp
         import numpy as np
+        t0 = time.perf_counter()
         items = [jax.tree.map(np.asarray, x) for x in self._buf]
         self._buf = []
         n = len(items)
@@ -849,21 +928,104 @@ class _DeviceStageNode(FFNode):
         xs = jax.tree.map(lambda *ts: jnp.asarray(np.stack(ts)), *items)
         if self._sharding is not None:
             xs = jax.device_put(xs, self._sharding)
-        ys = jax.block_until_ready(self._batched(xs, jnp.int32(self._off)))
+        # async dispatch: the jitted call returns unfinalized arrays — no
+        # block_until_ready here; the sync happens at retirement
+        ys = self._batched(xs, jnp.int32(self._off))
         self._off += n
         self._flushes += 1
+        with self._stats_lock:
+            self._t_submit += time.perf_counter() - t0
+        if self._inflight <= 1:
+            # the synchronous boundary (overlap off): await in place —
+            # byte- and order-identical to the pre-overlap behavior
+            self._retire(n, ys)
+            return
+        # start the d2h copy behind the compute so retirement mostly finds
+        # the bytes already landed host-side (backends without the method
+        # just pay the copy at retirement, as before)
+        for leaf in jax.tree.leaves(ys):
+            copy = getattr(leaf, "copy_to_host_async", None)
+            if copy is not None:
+                try:
+                    copy()
+                except Exception:   # noqa: BLE001 - optional fast path
+                    pass
+        self._window.append((n, ys))
+        while len(self._window) > self._inflight:
+            t1 = time.perf_counter()
+            self._retire(*self._window.popleft())
+            with self._stats_lock:
+                self._t_stall += time.perf_counter() - t1
+
+    def _retire(self, n: int, ys: Any) -> None:
+        import jax
+        import numpy as np
+        t0 = time.perf_counter()
         # ONE device->host copy per output leaf, then numpy slicing — per-item
         # jax indexing pays a dispatch per item and dominates small batches
         host = jax.tree.map(np.asarray, ys)
+        with self._stats_lock:
+            self._t_drain += time.perf_counter() - t0
+            self._retired += n
+        if self._abandoned:
+            return
         for i in range(n):
             self.ff_send_out(jax.tree.map(lambda t: t[i], host))
+
+    def set_window(self, inflight: Optional[int] = None,
+                   microbatch: Optional[int] = None) -> None:
+        """Live boundary retune (the Supervisor's ``_boundary_act``).  Both
+        take effect at the next dispatch on the node's own thread: growing
+        the window lets more microbatches ride in flight, shrinking it
+        retires eagerly until the window fits again."""
+        if microbatch is not None:
+            self._B = max(int(microbatch), self._mult)
+        if inflight is not None:
+            self._inflight = max(1, int(inflight))
+
+    def make_handle(self, desc: Optional[str] = None) -> "DeviceBoundaryHandle":
+        return DeviceBoundaryHandle(desc or f"device[{self._label}]", self)
 
     def node_stats(self) -> dict:
         s = super().node_stats()
         s["node"] = f"device[{self._label}]"
         s["backend"] = "device"
         s["flushes"] = self._flushes
+        with self._stats_lock:
+            drain = self._t_drain
+            s["boundary"] = {
+                "mode": "overlapped" if self._inflight > 1 else "sync",
+                "microbatch": self._B, "inflight": self._inflight,
+                "window": len(self._window), "retired": self._retired,
+                "submit_s": round(self._t_submit, 6),
+                "drain_s": round(drain, 6),
+                "stall_s": round(self._t_stall, 6),
+                "stall_frac": round(self._t_stall / drain, 4) if drain > 0
+                else 0.0,
+            }
         return s
+
+
+class DeviceBoundaryHandle(StageHandle):
+    """:class:`~repro.core.graph.StageHandle` over a
+    :class:`_DeviceStageNode`: read-only stats (including the ``boundary``
+    block — submit/drain/stall split) plus the in-flight window retune
+    surface (``set_window``) the Supervisor's boundary policy drives.  Not
+    ``reconfigurable`` — the boundary has no tier to migrate or farm width
+    to resize; ``boundary_tunable`` is its own capability flag."""
+
+    boundary_tunable = True
+
+    def __init__(self, desc: str, node: _DeviceStageNode):
+        super().__init__(desc, node, tier="device")
+        self._node = node
+
+    def stats(self) -> dict:
+        return self._node.node_stats()
+
+    def set_window(self, inflight: Optional[int] = None,
+                   microbatch: Optional[int] = None) -> None:
+        self._node.set_window(inflight=inflight, microbatch=microbatch)
 
 
 class HybridRunner(HostRunner):
@@ -872,6 +1034,19 @@ class HybridRunner(HostRunner):
     process farms through :class:`~repro.core.process.ProcessFarmNode`).
     Same surface as :class:`HostRunner`; ``placements`` records the
     compiler's per-stage decisions."""
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        """Best-effort unwind of a mid-stream hybrid runner: abandon every
+        device boundary FIRST — their ``svc`` drops instead of dispatching
+        and their ``svc_end`` still awaits (then discards) every in-flight
+        microbatch, so dispatched device work is drained rather than leaked
+        and the boundary thread can never wedge pushing results at a
+        results queue nobody reads — then run the normal host unwind (EOS
+        feed + join)."""
+        for st in self._top_members():
+            if isinstance(st, _DeviceStageNode):
+                st.abandon()
+        super().shutdown(timeout)
 
 
 class ProcessRunner(HostRunner):
@@ -1012,7 +1187,9 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
          shm_slot_bytes: int = 1 << 16, adaptive: bool = False,
          remote_workers: Optional[Sequence] = None,
          net_credit: int = 32, transport: Any = None,
-         fuse: bool = True) -> Any:
+         fuse: bool = True, overlap: bool = True,
+         microbatch: Optional[int] = None,
+         inflight: Optional[int] = None) -> Any:
     """Build the runner for a placed graph (stage 4).
 
     Device placements go through the :mod:`~repro.core.fuse` pass first:
@@ -1022,6 +1199,13 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
     :class:`~repro.core.graph.DeviceRunner` part (all-device graphs).
     ``fuse=False`` restores the pre-fusion one-program-per-stage emit (A/B
     benchmarks, parity tests).
+
+    ``overlap``/``microbatch``/``inflight`` shape the host<->device
+    boundary those segments run behind — the depth-K asynchronous in-flight
+    window of :class:`_DeviceStageNode` (hybrid) and the microbatch
+    software pipeline of :class:`~repro.core.graph.DeviceRunner`
+    (all-device); see :class:`CompileConfig` for the semantics and
+    defaults.
 
     ``transport`` (a :class:`~repro.core.shm.TransportConfig`, or a dict of
     its fields) tunes every shared-memory lane the lowering builds:
@@ -1100,7 +1284,8 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
                               feedback_steps=feedback_steps,
                               feedback_cond=feedback_cond,
                               a2a_capacity_factor=a2a_capacity_factor,
-                              fuse=fuse)
+                              fuse=fuse, overlap=overlap,
+                              microbatch=microbatch, inflight=inflight)
     elif targets == {"host"}:
         _materialize_widths(graph.root)
         cls = RemoteRunner if has_remote else (
@@ -1114,8 +1299,17 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
         mesh_axis = _mesh_axis_size(plan, axis)
         # in a feedback loop items circulate one at a time: a buffering
         # boundary node would starve the loop waiting for a full microbatch
+        # — and an async in-flight window holding results back would
+        # deadlock it outright, so wrap graphs force the sync boundary
         if device_batch is None:
             device_batch = 1 if graph._wrap else 8 * mesh_axis
+        if microbatch is not None:
+            device_batch = max(1, int(microbatch))
+        if graph._wrap:
+            overlap = False
+        if inflight is None:
+            rec = pm.lookup_autotuned("device_overlap:window")
+            inflight = int(rec.get("inflight", 2)) if rec else 2
         new_stages: List[Any] = []
         for entry, p in fuse_device_segments(stages, placements,
                                              enable=fuse):
@@ -1134,7 +1328,8 @@ def emit(graph: FFGraph, plan: Any = None, *, capacity: int = 512,
                                  label=entry.describe(),
                                  jit_key=segment_key(
                                      sub, device_batch, mult, plan, axis,
-                                     a2a_capacity_factor))))
+                                     a2a_capacity_factor),
+                                 overlap=overlap, inflight=inflight)))
         _materialize_widths(PipeG(new_stages))
         hg = FFGraph(new_stages[0] if len(new_stages) == 1
                      else PipeG(new_stages))
@@ -1232,4 +1427,6 @@ def compile_graph(graph: FFGraph, plan: Any = None, *,
                 shm_slot_bytes=cfg.shm_slot_bytes, adaptive=cfg.adaptive,
                 remote_workers=cfg.remote_workers,
                 net_credit=cfg.net_credit,
-                transport=cfg.transport, fuse=cfg.fuse)
+                transport=cfg.transport, fuse=cfg.fuse,
+                overlap=cfg.overlap, microbatch=cfg.microbatch,
+                inflight=cfg.inflight)

@@ -1148,13 +1148,28 @@ class DeviceRunner(Runner):
     one-program-per-stage split (one entry per top-level stage, one jit +
     one host sync each) — per-stage observability for A/B benchmarks and
     the adaptive runtime's attribution experiments; a ``wrap_around`` graph
-    always runs its feedback loop as one fused part."""
+    always runs its feedback loop as one fused part.
+
+    ``microbatch=`` switches ``run`` from one whole-stream batch to a
+    *software pipeline* of microbatches through the overlapped boundary:
+    each chunk is dispatched asynchronously (no per-chunk
+    ``block_until_ready``) and retired FIFO once ``inflight`` newer chunks
+    ride behind it, so host stacking of chunk *i+1* and the copy-out of
+    *i-1* overlap the device compute of *i*.  Absolute per-chunk stream
+    offsets keep ``all_to_all`` routing identical to the whole-batch path;
+    ``overlap=False`` (or ``inflight=1``) runs the same chunking strictly
+    synchronously.  ``stats()['boundary']`` splits the run into h2d stack
+    time, async submit, and drain (compute remainder + d2h) so placement
+    reports show where the boundary is stall-bound."""
 
     def __init__(self, graph: FFGraph, plan: Any, axis: str = "data",
                  feedback_steps: Optional[int] = None,
                  feedback_cond: Optional[Callable] = None,
                  a2a_capacity_factor: Optional[float] = None,
-                 fuse: bool = True):
+                 fuse: bool = True, overlap: bool = True,
+                 microbatch: Optional[int] = None,
+                 inflight: Optional[int] = None):
+        from . import perf_model as pm
         from .compiler import _top_stages, make_device_batched
         from .fuse import jit_segment, segment_key
         self._t0 = self._t1 = 0.0
@@ -1164,6 +1179,19 @@ class DeviceRunner(Runner):
         # _parts: [desc, jitted batched(xs, offset), svc_time_ema_s, items]
         self._parts: List[List[Any]] = []
         self._axis_size = 1
+        # a feedback loop runs its turns over the whole batch at once:
+        # chunking would re-trace the scan per chunk shape for no benefit
+        self._microbatch = None if graph._wrap else microbatch
+        if inflight is None:
+            rec = pm.lookup_autotuned("device_overlap:window")
+            inflight = int(rec.get("inflight", 2)) if rec else 2
+        self._inflight = max(1, int(inflight)) if overlap else 1
+        # boundary accounting (cumulative seconds; under _stats_lock)
+        self._b_h2d = 0.0      # host stack + device transfer submit
+        self._b_submit = 0.0   # async dispatch of the jitted parts
+        self._b_drain = 0.0    # copy-out wait (compute remainder + d2h)
+        self._b_stall = 0.0    # drain share paid while the window was full
+        self._chunks = 0
 
         def _add_part(sub: FFGraph, desc: str,
                       steps: Optional[int] = None,
@@ -1195,6 +1223,8 @@ class DeviceRunner(Runner):
         items = [np.asarray(x) for x in stream]
         if not items:
             return []
+        if self._microbatch is not None:
+            return self._run_pipelined(items)
         n = len(items)
         pad = (-n) % self._axis_size
         # stack on the host, then ONE device put for the whole batch
@@ -1220,15 +1250,100 @@ class DeviceRunner(Runner):
         host = jax.tree.map(np.asarray, ys)
         return [jax.tree.map(lambda t: t[i], host) for i in range(n)]
 
+    def _run_pipelined(self, items: List[Any]) -> List[Any]:
+        """The overlapped boundary: chunk the stream into microbatches and
+        keep a depth-K window of them in flight.  Dispatch never syncs —
+        the oldest chunk is only awaited (FIFO, so order is exact) once the
+        window is full; bytes match the whole-batch path because each chunk
+        runs the same jitted parts at its absolute stream offset."""
+        import collections
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        B = max(int(self._microbatch), self._axis_size)
+        out: List[Any] = []
+        window = collections.deque()   # FIFO of (k, ys) in flight
+
+        def retire(k: int, ys: Any, stalled: bool) -> None:
+            t0 = time.perf_counter()
+            host = jax.tree.map(np.asarray, ys)
+            dt = time.perf_counter() - t0
+            with self._stats_lock:
+                self._b_drain += dt
+                if stalled:
+                    self._b_stall += dt
+            out.extend(jax.tree.map(lambda t, i=i: t[i], host)
+                       for i in range(k))
+
+        n = len(items)
+        for start in range(0, n, B):
+            chunk = items[start:start + B]
+            k = len(chunk)
+            pad = (-k) % self._axis_size
+            t0 = time.perf_counter()
+            xs = jnp.asarray(np.stack(chunk + chunk[:1] * pad))
+            t1 = time.perf_counter()
+            # async dispatch of every part at this chunk's absolute stream
+            # offset (all_to_all routing parity with the host feeder)
+            offset = jnp.int32(start)
+            ys = xs
+            for part in self._parts:
+                ys = part[1](ys, offset)
+            t2 = time.perf_counter()
+            with self._stats_lock:
+                self._b_h2d += t1 - t0
+                self._b_submit += t2 - t1
+                self._chunks += 1
+                per_item = (t2 - t0) / k / max(1, len(self._parts))
+                for part in self._parts:
+                    # submit-side attribution only: the drain below is a
+                    # boundary property, not any one part's service time
+                    part[2] = per_item if part[3] == 0 \
+                        else 0.5 * part[2] + 0.5 * per_item
+                    part[3] += k
+            if self._inflight <= 1:
+                retire(k, ys, stalled=False)   # the synchronous boundary
+                continue
+            for leaf in jax.tree.leaves(ys):
+                copy = getattr(leaf, "copy_to_host_async", None)
+                if copy is not None:
+                    try:
+                        copy()
+                    except Exception:   # noqa: BLE001 - optional fast path
+                        pass
+            window.append((k, ys))
+            while len(window) > self._inflight:
+                retire(*window.popleft(), stalled=True)
+        while window:
+            retire(*window.popleft(), stalled=False)
+        self._t1 = time.perf_counter()
+        with self._stats_lock:
+            self._items += n
+            self._batches += 1
+        return out
+
     def stats(self) -> dict:
         with self._stats_lock:
             stages = [{"node": f"device[{desc}]", "backend": "device",
                        "items": it, "svc_time_ema_s": ema}
                       for desc, _fn, ema, it in self._parts]
+            drain = self._b_drain
             return {"backend": "DeviceRunner", "items": self._items,
                     "batches": self._batches,
                     "svc_time_ema_s": sum(s["svc_time_ema_s"]
                                           for s in stages),
+                    "boundary": {
+                        "mode": ("overlapped" if self._microbatch is not None
+                                 and self._inflight > 1 else "sync"),
+                        "microbatch": self._microbatch or 0,
+                        "inflight": self._inflight, "chunks": self._chunks,
+                        "h2d_s": round(self._b_h2d, 6),
+                        "submit_s": round(self._b_submit, 6),
+                        "drain_s": round(drain, 6),
+                        "stall_s": round(self._b_stall, 6),
+                        "stall_frac": round(self._b_stall / drain, 4)
+                        if drain > 0 else 0.0,
+                    },
                     "stages": stages}
 
     def stage_handles(self) -> List[StageHandle]:

@@ -202,6 +202,17 @@ class HostCalibration:
     shm_batched_hop_s: float = 5e-5
     # streaming bandwidth of the slab arena (oversize-ndarray path), GB/s
     arena_bw_gbs: float = 2.0
+    # host<->device boundary transfer bandwidths (GB/s): what one microbatch
+    # pays to cross the boundary each way.  With the overlapped boundary
+    # (double-buffered async device_put / copy-out) these are what place()
+    # charges AGAINST compute, not in addition to it.
+    h2d_bw_gbs: float = 8.0
+    d2h_bw_gbs: float = 8.0
+    # overlap efficiency of the async boundary: 1.0 = transfers hide
+    # perfectly behind compute (cost = max(transfer, compute)), 0.0 = no
+    # overlap at all (cost = transfer + compute).  Measured by timing a
+    # depth-K in-flight dispatch window against K synchronous round trips.
+    overlap_eff: float = 0.5
     source: str = "default"
 
     def as_dict(self) -> dict:
@@ -214,17 +225,30 @@ class HostCalibration:
         can never make the process tier look *worse* than per-item."""
         return min(self.proc_hop_s, self.shm_batched_hop_s)
 
+    def boundary_time(self, transfer_s: float, compute_s: float) -> float:
+        """Cost of one fused device run behind the *overlapped* boundary:
+        the async window hides ``overlap_eff`` of the smaller term behind
+        the larger one, so the run costs ``max(transfer, compute)`` plus
+        the unhidden remainder — never their plain sum (the synchronous
+        boundary's price), never better than the larger term alone."""
+        lo, hi = min(transfer_s, compute_s), max(transfer_s, compute_s)
+        eff = min(1.0, max(0.0, self.overlap_eff))
+        return hi + (1.0 - eff) * lo
+
 
 # conservative fallbacks, used only until/unless calibrate() has run
 DEFAULT_CALIBRATION = HostCalibration(
     peak_flops=5e10, queue_hop_s=2e-5, proc_hop_s=2e-4,
     device_dispatch_s=2e-5, net_hop_s=5e-4, fused_segment_s=2e-6,
-    shm_batched_hop_s=5e-5, arena_bw_gbs=2.0, source="default")
+    shm_batched_hop_s=5e-5, arena_bw_gbs=2.0,
+    h2d_bw_gbs=8.0, d2h_bw_gbs=8.0, overlap_eff=0.5, source="default")
 
-# version 4: fused_segment_s (device-segment fusion) + the autotune table;
-# version 3: shm_batched_hop_s + arena_bw_gbs joined (the batched uSPSC
-# transport); version 2 added net_hop_s — older caches must miss cleanly
-_CALIB_VERSION = 4
+# version 5: h2d_bw_gbs/d2h_bw_gbs + overlap_eff (the overlapped device
+# boundary); version 4: fused_segment_s (device-segment fusion) + the
+# autotune table; version 3: shm_batched_hop_s + arena_bw_gbs joined (the
+# batched uSPSC transport); version 2 added net_hop_s — older caches must
+# miss cleanly
+_CALIB_VERSION = 5
 _calibration: Optional[HostCalibration] = None
 
 
@@ -541,12 +565,84 @@ def _measure_fused_segment(k: int = 4) -> float:
         return DEFAULT_CALIBRATION.fused_segment_s
 
 
+def _measure_h2d_bw(nbytes: int = 4 << 20, reps: int = 5) -> float:
+    """Host->device boundary bandwidth (GB/s): one device_put of an
+    ``nbytes`` float32 array, synced, best of ``reps`` — the per-microbatch
+    input cost of the device boundary node."""
+    try:
+        import jax
+        import numpy as np
+        a = np.zeros(nbytes // 4, dtype=np.float32)
+        jax.block_until_ready(jax.device_put(a))    # warm the path
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.device_put(a))
+            best = min(best, time.perf_counter() - t0)
+        return max(nbytes / max(best, 1e-9) / 1e9, 1e-3)
+    except Exception:   # noqa: BLE001 - no usable backend: keep the default
+        return DEFAULT_CALIBRATION.h2d_bw_gbs
+
+
+def _measure_d2h_bw(nbytes: int = 4 << 20, reps: int = 5) -> float:
+    """Device->host boundary bandwidth (GB/s): one full host copy-out of an
+    ``nbytes`` device array, best of ``reps`` — the per-microbatch output
+    cost of the device boundary node."""
+    try:
+        import jax
+        import numpy as np
+        x = jax.block_until_ready(
+            jax.device_put(np.zeros(nbytes // 4, dtype=np.float32)))
+        np.asarray(x)                               # warm the path
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            np.asarray(x)
+            best = min(best, time.perf_counter() - t0)
+        return max(nbytes / max(best, 1e-9) / 1e9, 1e-3)
+    except Exception:   # noqa: BLE001 - no usable backend: keep the default
+        return DEFAULT_CALIBRATION.d2h_bw_gbs
+
+
+def _measure_overlap_eff(k: int = 8, reps: int = 3) -> float:
+    """Overlap efficiency of JAX's async dispatch on this backend: time
+    ``k`` jitted steps submitted as one in-flight window (sync only at the
+    end) against the same ``k`` steps each synced before the next is
+    submitted.  1 - window/serial is the fraction of per-step host round
+    trips the window hides; clamped to [0, 1].  A backend with synchronous
+    dispatch measures ~0 and place() falls back to costing the boundary as
+    transfer + compute."""
+    try:
+        import jax
+        import jax.numpy as jnp
+        f = jax.jit(lambda x: x * 1.0001 + 1.0)
+        x = jnp.zeros((256, 256), jnp.float32)
+        jax.block_until_ready(f(x))                 # compile off the clock
+        serial = window = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _i in range(k):
+                jax.block_until_ready(f(x))
+            serial = min(serial, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            ys = [f(x) for _i in range(k)]
+            jax.block_until_ready(ys)
+            window = min(window, time.perf_counter() - t0)
+        if serial <= 0.0 or not (serial < float("inf")):
+            return DEFAULT_CALIBRATION.overlap_eff
+        return min(1.0, max(0.0, 1.0 - window / serial))
+    except Exception:   # noqa: BLE001 - no usable backend: keep the default
+        return DEFAULT_CALIBRATION.overlap_eff
+
+
 def calibrate(cache: bool = True) -> HostCalibration:
     """Measure the host-tier cost constants on this machine and (optionally)
     persist them, replacing the baked-in defaults ``place`` would otherwise
     consume: one core's useful numpy FLOP/s, the per-item thread-queue hop,
     the per-item shared-memory process-lane hop, the per-item loopback
-    network-lane hop, and the host<->device dispatch cost.
+    network-lane hop, the host<->device dispatch cost, the boundary
+    transfer bandwidths each way (h2d/d2h), and the async-dispatch overlap
+    efficiency the overlapped boundary can bank on.
 
     A read-only or unwritable cache location (containerized remote workers,
     sealed CI sandboxes) degrades to in-memory constants with a one-line
@@ -561,6 +657,9 @@ def calibrate(cache: bool = True) -> HostCalibration:
         fused_segment_s=_measure_fused_segment(),
         shm_batched_hop_s=_measure_shm_batched_hop(),
         arena_bw_gbs=_measure_arena_bw(),
+        h2d_bw_gbs=_measure_h2d_bw(),
+        d2h_bw_gbs=_measure_d2h_bw(),
+        overlap_eff=_measure_overlap_eff(),
         source="measured")
     _calibration = c
     if cache:
@@ -595,6 +694,9 @@ def _load_cached_calibration() -> Optional[HostCalibration]:
             fused_segment_s=float(d["fused_segment_s"]),
             shm_batched_hop_s=float(d["shm_batched_hop_s"]),
             arena_bw_gbs=float(d["arena_bw_gbs"]),
+            h2d_bw_gbs=float(d["h2d_bw_gbs"]),
+            d2h_bw_gbs=float(d["d2h_bw_gbs"]),
+            overlap_eff=float(d["overlap_eff"]),
             source="cached")
     except (OSError, ValueError, KeyError, TypeError):
         # any unreadable/corrupt cache is a miss, never a crash

@@ -343,6 +343,9 @@ class Supervisor:
     carry hysteresis + a per-stage cooldown so the supervisor cannot flap.
     A supervisor over a runner with no adaptive stages is a pure observer —
     useful on its own, since the observations refine later compiles.
+    Overlapped device boundaries (``boundary_tunable`` handles) get their
+    in-flight window depth retuned live from observed boundary stall stats
+    (``_boundary_act``).
 
     Policy knobs (defaults chosen to act within a few sampling windows
     without reacting to one noisy sample): ``hi``/``lo`` are the
@@ -382,6 +385,7 @@ class Supervisor:
         self.observed_facts = 0
         self.loop_time_s = 0.0          # supervisor overhead accounting
         self._win: Dict[int, tuple] = {}
+        self._bwin: Dict[int, tuple] = {}   # boundary stall windows
         self._cooldown: Dict[int, float] = {}
         self._ticks = 0
         self._stop = threading.Event()
@@ -439,6 +443,8 @@ class Supervisor:
                 self._act(i, h, s)
             if getattr(h, "slo_controllable", False):
                 self._slo_act(i, h, s)
+            if getattr(h, "boundary_tunable", False):
+                self._boundary_act(i, h, s)
         self._ticks += 1
         if self.observe_enabled and self._ticks % self.observe_every == 0:
             self.observed_facts += pm.observe({"stages": snaps})
@@ -474,6 +480,50 @@ class Supervisor:
                      f"backlog {backlog}/{capacity} "
                      f"({backlog / max(1, capacity):.0%}): pressure "
                      f"{prev} -> {level}")
+
+    def _boundary_act(self, i: int, h: StageHandle, s: dict) -> None:
+        """Window policy for overlapped device boundaries
+        (:class:`~repro.core.compiler.DeviceBoundaryHandle`): watch the
+        *stall* share of the boundary's drain time over the sampling
+        window — drain paid while the in-flight window was full means the
+        host had to wait for device work that a deeper window would have
+        hidden, so grow ``inflight``; a window that never stalls is deeper
+        than the pipeline needs, so shrink it back.  Same hysteresis
+        discipline as the tier policies: per-stage cooldown, a minimum
+        number of retired items per window, and a dead band between the
+        grow and shrink thresholds so the depth cannot flap."""
+        b = s.get("boundary") or {}
+        if b.get("mode") != "overlapped":
+            return
+        now = time.monotonic()
+        retired = int(b.get("retired", 0) or 0)
+        stall = float(b.get("stall_s", 0.0) or 0.0)
+        drain = float(b.get("drain_s", 0.0) or 0.0)
+        prev = self._bwin.get(i)
+        self._bwin[i] = (now, retired, stall, drain)
+        if prev is None or now < self._cooldown.get(i, 0.0):
+            return
+        d_items = retired - prev[1]
+        d_stall, d_drain = stall - prev[2], drain - prev[3]
+        if d_items < self.min_window_items or d_drain <= 0.0:
+            return
+        frac = d_stall / d_drain
+        k = int(b.get("inflight", 2) or 2)
+        stage = s.get("node", h.desc)
+        if frac > 0.5 and k < 8:
+            h.set_window(inflight=k + 1)
+            self._record(stage, "retune",
+                         f"boundary stalled {frac:.0%} of drain over "
+                         f"{d_items} items: inflight {k} -> {k + 1}")
+        elif frac < 0.05 and k > 2:
+            h.set_window(inflight=k - 1)
+            self._record(stage, "retune",
+                         f"boundary never stalls ({frac:.0%}): inflight "
+                         f"{k} -> {k - 1}")
+        else:
+            return
+        self._cooldown[i] = now + self.cooldown_s
+        self._bwin.pop(i, None)         # the old window spans two depths
 
     def _act(self, i: int, h: StageHandle, s: dict) -> None:
         now = time.monotonic()

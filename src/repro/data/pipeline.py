@@ -96,12 +96,17 @@ class DataPipeline:
                 stages.append(ff_seq(compute, pure=True))
         self.graph: FFGraph = ff_pipeline(*stages)
         from ..core.compiler import CompileConfig
+        # the device boundary prefetches through the overlapped window: up
+        # to ``prefetch`` compute batches ride in flight behind the one the
+        # training loop is consuming (microbatch stays 1 — each source
+        # batch is already the device-sized unit here), and the bounded
+        # results queue still back-pressures the whole pipeline
         self._runner = self.graph.compile(config=CompileConfig(
             plan=plan if compute is not None else None,
             capacity=max(2, prefetch), results_capacity=max(2, prefetch),
             device_batch=1, placements=placements,
             shm_slot_bytes=shm_slot_bytes, adaptive=adaptive,
-            transport=transport))
+            transport=transport, overlap=True, inflight=max(2, prefetch)))
         self.placements = getattr(self._runner, "placements", [])
         # adaptive mode: a Supervisor thread samples the runner's stage
         # handles, re-places the compute farm live (width + thread/process

@@ -76,7 +76,28 @@ def main():
           f"{losses[-1]:.3f}; restarts={out['restarts']} "
           f"stragglers={out['stragglers']}")
     print("data graph stats (svc-time EMA / items / lane depths):")
-    print("  " + json.dumps(pipe.stats(), default=str))
+    stats = pipe.stats()
+    print("  " + json.dumps(stats, default=str))
+    # boundary stall report: where the host<->device hop is stall-bound
+    # (submit = stack+put+dispatch, drain = compute remainder + d2h copy,
+    # stall = drain paid while the in-flight window was full)
+    def _boundaries(x, out):
+        if isinstance(x, dict):
+            if "boundary" in x:
+                out.append((x.get("node", "device"), x["boundary"]))
+            for v in x.values():
+                _boundaries(v, out)
+        elif isinstance(x, (list, tuple)):
+            for v in x:
+                _boundaries(v, out)
+    bnds = []
+    _boundaries(stats, bnds)
+    for node, b in bnds:
+        print(f"  boundary[{node}] {b.get('mode')}: "
+              f"microbatch={b.get('microbatch')} inflight={b.get('inflight')}"
+              f" submit={b.get('submit_s', 0.0):.4f}s "
+              f"drain={b.get('drain_s', 0.0):.4f}s "
+              f"stall={b.get('stall_frac', 0.0):.0%} of drain")
     if args.adaptive:
         pipe.stop()                 # joins the supervisor, persists observe()
         events = pipe.replacement_events()

@@ -199,6 +199,13 @@ class _BatchState:
         self.active_mask = np.zeros((B,), bool)
         self.last_toks: Optional[np.ndarray] = None
         self.last_conf: Optional[np.ndarray] = None
+        # the in-flight decode step: (next_tokens, confidence) device arrays
+        # dispatched by DecodeNode but not yet copied out — CollectNode
+        # resolves them at the top of its turn, so the d2h copy (and the
+        # compute remainder behind it) overlaps the hop between the nodes
+        # and the next tick's slot-refill dispatch never waits on a host
+        # sync inside the decode node
+        self.pending: Optional[tuple] = None
 
 
 class PrefillNode(FFNode):
@@ -424,8 +431,20 @@ class DecodeNode(FFNode):
         st.cur_tok = nt
         st.pos = st.pos + jnp.asarray(st.active_mask, jnp.int32)
         self.steps += 1
-        st.last_toks = np.asarray(nt[:, 0])
-        st.last_conf = np.asarray(conf)
+        # the overlapped boundary, serving edition: do NOT sync here — start
+        # the device->host copies and hand the unfinalized arrays down the
+        # loop.  CollectNode resolves them, so the copy-out (and compute
+        # remainder) rides under the decode->collect hop, and the next
+        # tick's CacheManager refill dispatches behind the in-flight step
+        # without a host sync in between
+        for leaf in (nt, conf):
+            copy = getattr(leaf, "copy_to_host_async", None)
+            if copy is not None:
+                try:
+                    copy()
+                except Exception:   # noqa: BLE001 - optional fast path
+                    pass
+        st.pending = (nt, conf)
         return _TICK
 
 
@@ -464,6 +483,11 @@ class CollectNode(FFNode):
         if item is not _TICK:
             return item                   # pass-through
         st = self.state
+        if st.pending is not None:        # resolve the in-flight decode step
+            nt, conf = st.pending
+            st.pending = None
+            st.last_toks = np.asarray(nt[:, 0])
+            st.last_conf = np.asarray(conf)
         now = time.perf_counter()
         for slot in list(self.cm.active):
             req = self.cm.active[slot]

@@ -1,0 +1,267 @@
+"""The overlapped device boundary (core/compiler.py `_DeviceStageNode` +
+core/graph.py `DeviceRunner._run_pipelined`):
+
+- overlap-on vs overlap-off byte-identical parity across hybrid pipeline /
+  farm / all_to_all / wrap_around graphs (only the synchronization point
+  moves — the same jitted programs see the same stacked inputs);
+- exact input order preserved on a stream much longer than the in-flight
+  window (FIFO retirement);
+- a crash mid-window surfaces the error without wedging the runner;
+- ``microbatch=1, inflight=1`` degenerates to the synchronous boundary;
+- boundary stats, the :class:`DeviceBoundaryHandle` retune surface, and the
+  Supervisor's ``_boundary_act`` grow/shrink policy.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import FFNode, all_to_all, farm, pipeline
+from repro.core.compiler import (DeviceBoundaryHandle, HybridRunner,
+                                 _DeviceStageNode)
+
+
+class Gen(FFNode):
+    def __init__(self, n):
+        super().__init__()
+        self.i, self.n = 0, n
+
+    def svc(self, _):
+        self.i += 1
+        return np.float32(self.i) if self.i <= self.n else None
+
+
+def _bytes(out):
+    return [np.asarray(y).tobytes() for y in out]
+
+
+def _boundary_nodes(r):
+    return [s for s in r._skel._stages if isinstance(s, _DeviceStageNode)]
+
+
+# ---------------------------------------------------------------------------
+# overlap-on vs overlap-off parity
+# ---------------------------------------------------------------------------
+def test_hybrid_pipeline_overlap_parity(plan):
+    xs = [np.linspace(-1.0, 1.0, 16, dtype=np.float32) * (i + 1)
+          for i in range(23)]
+
+    def run(overlap):
+        r = pipeline(lambda x: np.asarray(x) + 1.0, lambda x: x * 1.5,
+                     lambda x: x - 0.125).compile(
+            plan, device_batch=4, inflight=3, normalize=False,
+            overlap=overlap,
+            placements={0: "host", 1: "device", 2: "device"})
+        assert isinstance(r, HybridRunner)
+        return r.run(xs)
+
+    assert _bytes(run(True)) == _bytes(run(False))
+
+
+def test_hybrid_farm_overlap_parity(plan):
+    n = 17
+
+    def run(overlap):
+        r = pipeline(Gen(n), farm(lambda x: x * 3.0 + 0.5, n=2)).compile(
+            plan, device_batch=4, inflight=2, normalize=False,
+            overlap=overlap, placements={1: "device"})
+        assert isinstance(r, HybridRunner)
+        return r.run()
+
+    a, b = run(True), run(False)
+    assert len(a) == n
+    assert _bytes(a) == _bytes(b)
+
+
+def test_hybrid_a2a_overlap_parity(plan):
+    """all_to_all routing keys off the absolute stream offset — the window
+    must keep the per-microbatch ``_off`` discipline bit-for-bit."""
+    n = 16
+
+    def run(overlap):
+        r = pipeline(Gen(n),
+                     all_to_all([lambda x: x * 10.0],
+                                [lambda y: y * 2.0, lambda y: y + 7.0]),
+                     lambda y: float(np.asarray(y)) - 0.25).compile(
+            plan, device_batch=4, inflight=3, normalize=False,
+            overlap=overlap, placements={1: "device", 2: "host"})
+        assert isinstance(r, HybridRunner)
+        return r.run()
+
+    a, b = run(True), run(False)
+    assert len(a) == n
+    assert _bytes(a) == _bytes(b)
+
+
+def test_wrap_around_hybrid_forces_sync_boundary(plan):
+    """A feedback loop circulates one item at a time: an async window
+    holding results back would deadlock it, so the hybrid emit forces the
+    synchronous boundary no matter what ``overlap``/``inflight`` ask for."""
+    def run(overlap):
+        g = pipeline(lambda x: float(x) + 0.0, lambda x: x + 1.0)
+        g = g.wrap_around()
+        r = g.compile(plan, overlap=overlap, inflight=8, normalize=False,
+                      feedback_cond=lambda x: float(np.asarray(x)) < 10.0,
+                      placements={0: "host", 1: "device"})
+        assert isinstance(r, HybridRunner)
+        node = _boundary_nodes(r)[0]
+        assert node._inflight == 1        # sync forced, even overlap=True
+        assert node._B == 1               # one item per turn
+        return r.run([np.float32(i) for i in range(4)], timeout=60.0)
+
+    a, b = run(True), run(False)
+    assert sorted(_bytes(a)) == sorted(_bytes(b))
+    assert sorted(float(np.asarray(x)) for x in a) == [10.0] * 4
+
+
+def test_device_runner_microbatched_parity(plan):
+    """All-device path: the software-pipelined chunking (async window AND
+    strictly-sync chunking) matches the whole-stream batch byte-for-byte."""
+    xs = [np.linspace(-1.0, 1.0, 8, dtype=np.float32) * (i + 1)
+          for i in range(23)]
+
+    def build():
+        return pipeline(lambda x: x * 1.5 + 0.25, lambda x: x - 0.125)
+
+    whole = build().compile(plan, mode="device").run(xs)
+    piped = build().compile(plan, mode="device", microbatch=4,
+                            inflight=3).run(xs)
+    sync = build().compile(plan, mode="device", microbatch=4,
+                           overlap=False).run(xs)
+    assert _bytes(whole) == _bytes(piped) == _bytes(sync)
+
+
+# ---------------------------------------------------------------------------
+# ordering, degeneration, crash-in-flight
+# ---------------------------------------------------------------------------
+def test_exact_order_on_stream_much_longer_than_window(plan):
+    n = 200                              # 50 microbatches through a 4-window
+    xs = [np.float32(i) for i in range(n)]
+    r = pipeline(lambda x: float(x), lambda x: x * 2.0).compile(
+        plan, device_batch=4, inflight=4, normalize=False,
+        placements={0: "host", 1: "device"})
+    out = [float(np.asarray(y)) for y in r.run(xs)]
+    assert out == [2.0 * i for i in range(n)]
+
+
+def test_microbatch1_inflight1_degenerates_to_sync(plan):
+    xs = [np.float32(i) for i in range(6)]
+    r = pipeline(lambda x: float(x), lambda x: x + 1.0).compile(
+        plan, microbatch=1, inflight=1, normalize=False,
+        placements={0: "host", 1: "device"})
+    node = _boundary_nodes(r)[0]
+    assert node._B == 1 and node._inflight == 1
+    out = [float(np.asarray(y)) for y in r.run(xs)]
+    assert out == [i + 1.0 for i in range(6)]
+    st = node.node_stats()
+    assert st["boundary"]["mode"] == "sync"
+    assert st["flushes"] == 6            # one dispatch per item, awaited
+    assert st["boundary"]["stall_s"] == 0.0
+    assert not node._window
+
+
+def test_crash_in_flight_surfaces_error_without_wedging(plan):
+    """A microbatch that fails to dispatch while older ones ride the window
+    must surface the error from run() — not hang the boundary thread or
+    leave the window half-drained."""
+    n_good = 8                           # two clean microbatches go async
+    xs = [np.ones((4,), np.float32) * i for i in range(n_good)]
+    xs.append(np.ones((5,), np.float32))  # ragged: np.stack blows up
+    xs += [np.ones((4,), np.float32)] * 3
+    r = pipeline(lambda x: np.asarray(x), lambda x: x * 2.0).compile(
+        plan, device_batch=4, inflight=4, normalize=False,
+        placements={0: "host", 1: "device"})
+    with pytest.raises(Exception):
+        r.run(xs, timeout=30.0)
+    node = _boundary_nodes(r)[0]
+    assert node.error is not None        # the worker error, not a timeout
+    assert not node._window              # drained, not wedged
+    assert not node._alive()
+
+
+# ---------------------------------------------------------------------------
+# boundary stats, handle, supervisor policy
+# ---------------------------------------------------------------------------
+def test_boundary_stats_and_handle(plan):
+    xs = [np.float32(i) for i in range(20)]
+    r = pipeline(lambda x: float(x), lambda x: x * 2.0).compile(
+        plan, device_batch=4, inflight=2, normalize=False,
+        placements={0: "host", 1: "device"})
+    r.run(xs)
+    node = _boundary_nodes(r)[0]
+    b = node.node_stats()["boundary"]
+    assert b["mode"] == "overlapped"
+    assert b["microbatch"] == 4 and b["inflight"] == 2
+    assert b["retired"] == 20
+    assert b["submit_s"] > 0.0 and b["drain_s"] > 0.0
+    h = [h for h in r.stage_handles()
+         if isinstance(h, DeviceBoundaryHandle)][0]
+    assert h.boundary_tunable and not h.reconfigurable
+    assert h.tier == "device"
+    assert h.stats()["boundary"]["retired"] == 20
+    h.set_window(inflight=5, microbatch=8)
+    assert node._inflight == 5 and node._B == 8
+
+
+def test_device_runner_boundary_stats(plan):
+    xs = [np.float32(i) for i in range(23)]
+    r = pipeline(lambda x: x * 2.0).compile(plan, mode="device",
+                                            microbatch=4, inflight=3)
+    r.run(xs)
+    b = r.stats()["boundary"]
+    assert b["mode"] == "overlapped" and b["chunks"] == 6
+    assert b["h2d_s"] > 0.0 and b["drain_s"] > 0.0
+    # the default whole-batch path still reports one batch (and says sync)
+    r2 = pipeline(lambda x: x * 2.0).compile(plan, mode="device")
+    r2.run(xs)
+    s2 = r2.stats()
+    assert s2["batches"] == 1 and s2["boundary"]["mode"] == "sync"
+
+
+class _StubBoundaryHandle:
+    boundary_tunable = True
+    reconfigurable = False
+    desc = "device[stub]"
+
+    def __init__(self):
+        self.windows = []
+
+    def set_window(self, inflight=None, microbatch=None):
+        self.windows.append(inflight)
+
+
+class _StubRunner:
+    def stage_handles(self):
+        return []
+
+
+def test_supervisor_boundary_retune_policy():
+    """_boundary_act grows the window when the stall share of drain over a
+    sampling window is high, shrinks it when the window never stalls, and
+    ignores sync boundaries — with cooldown in between."""
+    from repro.core.runtime import Supervisor
+
+    def snap(retired, stall, drain, k=2, mode="overlapped"):
+        return {"node": "device[x]",
+                "boundary": {"mode": mode, "inflight": k, "retired": retired,
+                             "stall_s": stall, "drain_s": drain}}
+
+    sup = Supervisor(_StubRunner(), observe=False, min_window_items=4)
+    h = _StubBoundaryHandle()
+    sup._boundary_act(0, h, snap(0, 0.0, 0.0))          # seeds the window
+    sup._boundary_act(0, h, snap(10, 0.9, 1.0))         # 90% stalled: grow
+    assert h.windows == [3]
+    assert sup.events and sup.events[-1].kind == "retune"
+    sup._boundary_act(0, h, snap(20, 1.8, 2.0))         # cooldown: no act
+    assert h.windows == [3]
+
+    sup2 = Supervisor(_StubRunner(), observe=False, min_window_items=4)
+    h2 = _StubBoundaryHandle()
+    sup2._boundary_act(0, h2, snap(0, 0.0, 0.0, k=4))
+    sup2._boundary_act(0, h2, snap(10, 0.0, 1.0, k=4))  # never stalls: shrink
+    assert h2.windows == [3]
+
+    sup3 = Supervisor(_StubRunner(), observe=False, min_window_items=4)
+    h3 = _StubBoundaryHandle()
+    sup3._boundary_act(0, h3, snap(0, 0.0, 0.0, mode="sync"))
+    sup3._boundary_act(0, h3, snap(10, 0.9, 1.0, mode="sync"))
+    assert h3.windows == []                             # sync: hands off

@@ -340,6 +340,31 @@ def test_shutdown_releases_abandoned_process_runner():
     assert all(not p.is_alive() for p in nodes[0]._procs)
 
 
+def test_shutdown_releases_abandoned_hybrid_runner(plan):
+    """Satellite of the overlapped boundary: shutting down a mid-stream
+    HybridRunner must drain (then discard) every in-flight device
+    microbatch and join the boundary thread — dispatched async work is
+    awaited, never leaked, and the boundary never wedges pushing results
+    at the dead results queue."""
+    from repro.core.compiler import HybridRunner, _DeviceStageNode
+    f = lambda x: x * 2.0
+    f.ff_flops = 1e9
+    r = pipeline(lambda x: float(x) + 1.0, f).compile(
+        plan, device_batch=2, inflight=4, normalize=False,
+        placements={0: "host", 1: "device"})
+    assert isinstance(r, HybridRunner)
+    r.run_then_freeze()
+    for i in range(9):                   # several microbatches go in flight
+        r.offload(np.float32(i))
+    r.shutdown(timeout=30.0)
+    node = [s for s in r._skel._stages
+            if isinstance(s, _DeviceStageNode)][0]
+    assert node._abandoned
+    assert not node._window              # in-flight window fully drained
+    assert not node._buf                 # partial microbatch dropped
+    assert not node._alive()             # boundary thread joined
+
+
 # -- autoscaling process farms ---------------------------------------------------
 @pytest.mark.shm
 def test_autoscale_process_farm_scales_active_set_without_forking():

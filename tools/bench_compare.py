@@ -8,7 +8,8 @@ Gated fields, by shape:
   finished-requests-per-second under 2x-overload Poisson replay — higher
   is better) and ``ratio_best`` (the best demonstrated pair ratio of an
   interleaved comparison run — process-vs-thread farm/a2a, vectored-vs-
-  per-item shm lane — higher is better) fail below
+  per-item shm lane, fused-vs-per-stage device segments, async-window-vs-
+  sync device boundary — higher is better) fail below
   ``(1 - max_regression)`` of the baseline;
 - ``reconfig_latency_ms`` (lower is better — the adaptive runtime's live
   drain-and-swap cost), ``net_rtt_us`` (lower is better — the distributed
